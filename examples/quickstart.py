@@ -1,0 +1,37 @@
+"""Quickstart: reconstruct a Shepp-Logan phantom with iFDK in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core.fdk import reconstruct, timed_reconstruct
+from repro.core.geometry import default_geometry
+from repro.core.phantom import forward_project, shepp_logan_volume
+
+
+def main():
+    # 64^3 volume from 128 cone-beam projections of the 3-D Shepp-Logan
+    g = default_geometry(64, n_proj=128)
+    print(f"geometry: {g.n_u}x{g.n_v}x{g.n_proj} -> "
+          f"{g.n_x}x{g.n_y}x{g.n_z}")
+
+    projections = forward_project(g)           # analytic X-ray simulator
+    vol, seconds, rate = timed_reconstruct(
+        g, projections, impl="factorized", iters=1
+    )
+    print(f"reconstructed in {seconds:.2f}s ({rate:.3f} GUPS on CPU)")
+
+    phantom = shepp_logan_volume(g)
+    m = g.n_x // 5
+    inner = (slice(m, g.n_x - m),) * 3
+    rmse = float(jnp.sqrt(jnp.mean((vol[inner] - phantom[inner]) ** 2)))
+    print(f"interior RMSE vs phantom: {rmse:.4f}")
+
+    # the paper's validation: factorized (Alg.4) == reference (Alg.2)
+    ref = reconstruct(g, projections, impl="reference")
+    err = float(jnp.max(jnp.abs(ref - vol))) / float(jnp.max(jnp.abs(ref)))
+    print(f"Alg.4 vs Alg.2 relative max err: {err:.2e} (paper bound: 1e-5 RMSE)")
+
+
+if __name__ == "__main__":
+    main()

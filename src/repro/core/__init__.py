@@ -1,0 +1,2 @@
+from .geometry import CBCTGeometry, default_geometry, projection_matrices
+from .fdk import reconstruct, fdk_scale, gups

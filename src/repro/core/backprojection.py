@@ -1,0 +1,173 @@
+"""Back-projection: reference (paper Alg. 2) and factorized (paper Alg. 4).
+
+Both are pure-jnp and serve as oracles for the Pallas kernel
+(`repro.kernels.backproject`). The factorized variant implements the paper's
+contribution:
+
+  * Theorem-2/3: per voxel column (i, j) the detector column u and the depth
+    z (hence the weight w = 1/z^2) are constant -> computed once per column
+    (2 inner products) instead of per voxel.
+  * v is *affine* in k (v_k = (y0 + k dy) / z) -> 1 inner product per voxel
+    reduced to one FMA.
+  * Theorem-1 (Z-symmetry): only k in [0, Nz/2) is computed; the mirrored
+    half reuses u, w and the reflected v~ = (Nv - 1) - v.
+  * Layout: volume is (Nx, Ny, Nz) with z innermost ("k-major" in the paper's
+    sense: the streamed dimension is contiguous -> TPU lanes run along z);
+    projections are transposed to Q^T = (N_u, N_v) so the inner gather walks
+    a contiguous detector row (the paper's \tilde{Q}).
+
+Cost of computing the projections: Alg. 2 does 3 inner products (12 MACs)
+per (i,j,k); Alg. 4 does 2 inner products per (i,j) plus 1 FMA + 1 division
+amortized-per-column, i.e. a factor ~1/6 on coordinate arithmetic for the
+half-grid it visits — matching the paper's claim.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Bilinear interpolation (paper Alg. 3) with zero-outside boundary handling
+# ---------------------------------------------------------------------------
+
+def bilinear_gather(img: Array, rows: Array, cols: Array) -> Array:
+    """Sample img[rows, cols] with bilinear sub-pixel interpolation.
+
+    Out-of-bounds neighbours contribute zero (matches a zero-padded detector;
+    the GPU texture unit's border mode in the paper's Bp-L1 variants).
+    """
+    nr, nc = img.shape
+    r0 = jnp.floor(rows)
+    c0 = jnp.floor(cols)
+    dr = rows - r0
+    dc = cols - c0
+    r0i = r0.astype(jnp.int32)
+    c0i = c0.astype(jnp.int32)
+
+    def tap(ri, ci, wgt):
+        valid = (ri >= 0) & (ri < nr) & (ci >= 0) & (ci < nc)
+        ric = jnp.clip(ri, 0, nr - 1)
+        cic = jnp.clip(ci, 0, nc - 1)
+        return jnp.where(valid, img[ric, cic] * wgt, 0.0)
+
+    return (
+        tap(r0i, c0i, (1 - dr) * (1 - dc))
+        + tap(r0i, c0i + 1, (1 - dr) * dc)
+        + tap(r0i + 1, c0i, dr * (1 - dc))
+        + tap(r0i + 1, c0i + 1, dr * dc)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference: paper Algorithm 2 (as implemented by RTK / RabbitCT)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("nx", "ny", "nz"))
+def backproject_reference(pmats: Array, proj: Array,
+                          nx: int, ny: int, nz: int) -> Array:
+    """Alg. 2: for each projection s, 3 inner products per voxel.
+
+    pmats: (N_p, 3, 4) float32; proj: (N_p, N_v, N_u) filtered projections.
+    Returns volume (nx, ny, nz), *unscaled* (see fdk.fdk_scale).
+    """
+    i = jnp.arange(nx, dtype=jnp.float32)[:, None, None]
+    j = jnp.arange(ny, dtype=jnp.float32)[None, :, None]
+    k = jnp.arange(nz, dtype=jnp.float32)[None, None, :]
+
+    def body(acc, sp):
+        p, q = sp
+        x = p[0, 0] * i + p[0, 1] * j + p[0, 2] * k + p[0, 3]
+        y = p[1, 0] * i + p[1, 1] * j + p[1, 2] * k + p[1, 3]
+        z = p[2, 0] * i + p[2, 1] * j + p[2, 2] * k + p[2, 3]
+        f = 1.0 / z
+        u = x * f
+        v = y * f
+        w = f * f
+        acc = acc + w * bilinear_gather(q, v, u)  # rows = v, cols = u
+        return acc, None
+
+    init = jnp.zeros((nx, ny, nz), jnp.float32)
+    vol, _ = jax.lax.scan(body, init, (pmats, proj))
+    return vol
+
+
+# ---------------------------------------------------------------------------
+# Factorized: paper Algorithm 4
+# ---------------------------------------------------------------------------
+
+def column_terms(p: Array, nx: int, ny: int) -> Tuple[Array, Array, Array, Array, Array]:
+    """Per-(i,j)-column invariants (Alg. 4 lines 6-10).
+
+    Returns (u, w, y0, dy, f): u and w constant along k (T2/T3); v_k is the
+    affine ramp (y0 + k*dy) * f.
+    """
+    i = jnp.arange(nx, dtype=jnp.float32)[:, None]
+    j = jnp.arange(ny, dtype=jnp.float32)[None, :]
+    x0 = p[0, 0] * i + p[0, 1] * j + p[0, 3]
+    y0 = p[1, 0] * i + p[1, 1] * j + p[1, 3]
+    z = p[2, 0] * i + p[2, 1] * j + p[2, 3]
+    f = 1.0 / z
+    return x0 * f, f * f, y0, p[1, 2], f
+
+
+@partial(jax.jit, static_argnames=("nx", "ny", "nz"))
+def backproject_factorized(pmats: Array, proj: Array,
+                           nx: int, ny: int, nz: int) -> Array:
+    """Alg. 4: factorized coordinates + Z-symmetry + transposed layout.
+
+    Matches backproject_reference to float32 reassociation tolerance whenever
+    the projection matrices satisfy Theorems 2/3 (structural zeros,
+    see geometry.assert_factorizable).
+
+    The accumulator lives in the DUAL-SLAB layout for the whole scan — the
+    mirror half is stored z-reversed, so no per-projection flip/concat
+    touches the volume (measured 1.9x on CPU, EXPERIMENTS.md §Perf); a
+    single relayout at the end restores (nx, ny, nz).
+    """
+    if nz % 2 != 0:
+        raise ValueError("factorized back-projection requires even N_z (T1 pairing)")
+    nzh = nz // 2
+    n_v = proj.shape[-2]
+    k = jnp.arange(nzh, dtype=jnp.float32)
+
+    def body(acc, sp):
+        acc_f, acc_b = acc
+        p, q = sp
+        qt = q.T  # \tilde{Q}: (N_u, N_v), v contiguous
+        u, w, y0, dy, f = column_terms(p, nx, ny)
+        v = (y0[..., None] + dy * k) * f[..., None]        # (nx, ny, nzh)
+        ub = jnp.broadcast_to(u[..., None], v.shape)
+        front = w[..., None] * bilinear_gather(qt, ub, v)   # rows=u, cols=v
+        vm = (n_v - 1.0) - v                                # Theorem-1 mirror
+        back = w[..., None] * bilinear_gather(qt, ub, vm)
+        return (acc_f + front, acc_b + back), None
+
+    zeros = jnp.zeros((nx, ny, nzh), jnp.float32)
+    (acc_f, acc_b), _ = jax.lax.scan(body, (zeros, zeros), (pmats, proj))
+    # single relayout: back half is voxel nz-1-k at index k
+    return jnp.concatenate([acc_f, jnp.flip(acc_b, axis=-1)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Dual-slab layout helpers (used by the Pallas kernel and the distributed
+# decomposition): volume (nx, ny, nz) <-> (nx, ny, 2, nz/2) where slab 1 is
+# stored z-reversed so that a symmetric pair (k, nz-1-k) shares an index.
+# ---------------------------------------------------------------------------
+
+def to_dual_slab(vol: Array) -> Array:
+    nz = vol.shape[-1]
+    front = vol[..., : nz // 2]
+    back = jnp.flip(vol[..., nz // 2:], axis=-1)
+    return jnp.stack([front, back], axis=-2)
+
+
+def from_dual_slab(dual: Array) -> Array:
+    front = dual[..., 0, :]
+    back = jnp.flip(dual[..., 1, :], axis=-1)
+    return jnp.concatenate([front, back], axis=-1)

@@ -1,0 +1,164 @@
+"""iFDK distributed decomposition (paper §4) on a JAX device mesh.
+
+Paper mapping (DESIGN.md §4):
+
+  * C (columns, projection groups)  -> mesh axes ("pod", "data")
+  * R (rows, volume slabs)          -> mesh axis "model"
+
+Per rank (paper Fig. 3): load + filter N_p/(C*R) projections; **AllGather**
+the filtered projections along the column (our `model` axis) so the whole
+column group holds its N_p/C subset; back-project the rank's volume slab;
+**Reduce** partial slabs along the row (our `data`/`pod` axes).
+
+Adaptations (documented in DESIGN.md §2/§9):
+  * The paper slabs the *outermost* dimension of its k-major volume layout
+    (z). Our TPU layout keeps z on the lane dimension, so we slab the
+    outermost dimension of *our* layout — x. Same decomposition principle;
+    keeps Theorem-1 mirror pairs on-rank and lanes contiguous.
+  * Slab offsets are folded into the projection matrices (a translation in i
+    is P[:, 3] += i0 * P[:, 0]), so every back-projection implementation
+    (reference / factorized / Pallas / MXU) is reused unchanged.
+  * The paper's rooted MPI_Reduce becomes psum (replicated slab) or
+    psum_scatter (beyond-paper: output left sharded over the data axis for
+    parallel store — removes the root bottleneck).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
+from .backprojection import backproject_factorized
+from .filtering import make_filter
+from .fdk import fdk_scale, _get_backprojector, BpImpl
+from .geometry import CBCTGeometry, projection_matrices
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class IFDKGrid:
+    """The paper's 2-D rank grid: R rows (volume slabs) x C columns."""
+
+    r: int
+    c: int
+
+    @property
+    def n_ranks(self) -> int:
+        return self.r * self.c
+
+
+def choose_grid(g: CBCTGeometry, n_devices: int,
+                hbm_bytes: int = 16 * 2**30,
+                sub_vol_bytes: int = 8 * 2**30) -> IFDKGrid:
+    """Paper §4.1.5: minimize R (each slab as large as fits), maximize C.
+
+    R = sizeof(float) * Nx*Ny*Nz / N_sub_vol, rounded up to a power of two
+    that divides n_devices.
+    """
+    vol_bytes = 4 * g.n_x * g.n_y * g.n_z
+    r = 1
+    while vol_bytes / r > sub_vol_bytes or (4 * g.n_u * g.n_v * 32
+                                            + vol_bytes / r) > hbm_bytes:
+        r *= 2
+    if r > n_devices:
+        raise ValueError(
+            f"volume needs R={r} slabs but only {n_devices} devices available"
+        )
+    while n_devices % r:
+        r *= 2  # keep the grid rectangular
+    return IFDKGrid(r=r, c=n_devices // r)
+
+
+def shift_pmats_i(pmats: Array, i0: Array) -> Array:
+    """Reparameterize P for a volume slab starting at voxel index i0:
+    P . [i + i0, j, k, 1]^T == P' . [i, j, k, 1]^T with
+    P'[:, 3] = P[:, 3] + i0 * P[:, 0]."""
+    shift = pmats[..., :, 0] * i0
+    return pmats.at[..., :, 3].add(shift)
+
+
+def _proj_spec(mesh: Mesh) -> P:
+    """Input projections are sharded over ALL mesh axes on the leading
+    (projection-count) dim: each rank loads N_p/(C*R) projections (Eq. 5)."""
+    return P(tuple(mesh.axis_names))
+
+
+def input_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, _proj_spec(mesh))
+
+
+def output_spec(mesh: Mesh, reduce: Literal["psum", "scatter"]) -> P:
+    if reduce == "scatter":
+        # x sharded over model (slabs); y scattered over the intra-pod data
+        # axis (the pod phase finishes with a psum, leaving y replicated
+        # across pods for the sharded store).
+        return P(AXIS_MODEL, AXIS_DATA)
+    return P(AXIS_MODEL)
+
+
+def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
+                         impl: BpImpl = "factorized",
+                         window: str = "ramlak",
+                         reduce: Literal["psum", "scatter"] = "scatter",
+                         ) -> Callable[[Array], Array]:
+    """Build the jit-able distributed reconstruction: projections -> volume.
+
+    Input : (N_p, N_v, N_u) sharded with `input_sharding(mesh)`.
+    Output: (N_x, N_y, N_z); x slab-sharded over `model`, and with
+            reduce="scatter" additionally y-sharded over `data` (+`pod`).
+    """
+    r = axis_size(mesh, AXIS_MODEL)
+    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
+    if g.n_proj % (r * c):
+        raise ValueError(f"N_p={g.n_proj} must divide over {r * c} ranks")
+    if g.n_x % r:
+        raise ValueError(f"N_x={g.n_x} must divide into R={r} slabs")
+    nx_slab = g.n_x // r
+    dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
+    filt = make_filter(g, window)
+    backproject = _get_backprojector(impl)
+    pmats_all = jnp.asarray(projection_matrices(g))
+    scale = fdk_scale(g)
+
+    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
+        # --- filtering stage (paper: CPU/IPP; here: fused, see DESIGN §2)
+        q_local = filt(proj_local)
+        # --- paper Fig. 3b: AllGather within the column (model axis)
+        q_col = lax.all_gather(q_local, AXIS_MODEL, axis=0, tiled=True)
+        pm_col = lax.all_gather(pmats_local, AXIS_MODEL, axis=0, tiled=True)
+        # --- back-project this rank's x-slab (offset folded into P)
+        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
+        pm_slab = shift_pmats_i(pm_col, i0.astype(pm_col.dtype))
+        slab = backproject(pm_slab, q_col, nx_slab, g.n_y, g.n_z)
+        # --- paper Fig. 3b: Reduce within the row (data/pod axes)
+        if reduce == "scatter":
+            slab = lax.psum_scatter(slab, dp[-1], scatter_dimension=1,
+                                    tiled=True)
+            if len(dp) == 2:  # multi-pod: finish the reduction across pods
+                slab = lax.psum(slab, dp[0])
+        else:
+            for a in dp:
+                slab = lax.psum(slab, a)
+        return slab * scale
+
+    pspec = _proj_spec(mesh)
+    out_sp = output_spec(mesh, reduce)
+
+    @jax.jit
+    def reconstruct(projections: Array) -> Array:
+        return jax.shard_map(
+            rank_fn, mesh=mesh,
+            in_specs=(pspec, pspec),
+            out_specs=out_sp,
+            check_vma=False,
+        )(pmats_all, projections)
+
+    return reconstruct

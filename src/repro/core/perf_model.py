@@ -1,0 +1,123 @@
+"""iFDK performance model (paper §4.2, Eqs. 8-19).
+
+T_compute = max(T_load, T_flt, T_AllGather, T_bp)            (Eq. 17)
+T_post    = T_trans + T_D2H + T_reduce + T_store             (Eq. 18)
+T_runtime = T_compute + T_post                               (Eq. 19)
+
+Constants are per-system micro-benchmark values (§4.2.1). `ABCI` reproduces
+the paper's projections (V100 nodes, GPFS, EDR IB); `TPU_V5E` adapts the
+model to the dry-run target: PCIe terms vanish (the volume never crosses a
+host bus before the reduce — HBM-resident), H2D becomes an HBM write term,
+and the collective throughputs derive from ICI/DCN link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .distributed import IFDKGrid
+from .geometry import CBCTGeometry
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConstants:
+    name: str
+    bw_load: float          # PFS aggregate read bandwidth, B/s
+    bw_store: float         # PFS aggregate write bandwidth, B/s
+    th_flt: float           # filtering throughput, projections/s per node
+    th_allgather: float     # AllGather throughput, projections/s per rank-group
+    gups_bp: float          # back-projection kernel throughput, GUPS/device
+    th_reduce: float        # volume reduction throughput, B/s per rank
+    bw_hd: float            # host<->device (PCIe) bandwidth per connector, B/s
+    n_hd_links: int         # PCIe connectors per node (paper N_PCIe)
+    devices_per_node: int
+
+
+# Paper §5.1/§5.3.3 measured constants (ABCI: 4xV100 + 2xEDR per node, GPFS).
+ABCI = SystemConstants(
+    name="abci-v100",
+    bw_load=50e9, bw_store=28.5e9,
+    th_flt=100.0, th_allgather=55.0,
+    gups_bp=200.0,                      # Table 4: L1-Tran ~200 GUPS
+    th_reduce=3.0e9,                    # ~8GB in ~2.7s (dual EDR)
+    bw_hd=11.9e9, n_hd_links=2, devices_per_node=4,
+)
+
+# TPU v5e pod target: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+# gups_bp derived from the roofline of the Pallas kernel (see EXPERIMENTS.md
+# §Roofline): the BP inner loop is ~17 flops + 4 f32 taps per update; on v5e
+# it is HBM/VMEM-bound at roughly bw_hbm / 20 B per update ~ 38 GUPS... the
+# kernel streams the volume once per 32-projection batch, so the effective
+# rate is gather-issue-bound; we use a conservative 100 GUPS/chip.
+TPU_V5E = SystemConstants(
+    name="tpu-v5e",
+    bw_load=100e9, bw_store=100e9,
+    th_flt=2000.0, th_allgather=400.0,
+    gups_bp=100.0,
+    th_reduce=50e9,                     # ICI reduce-scatter, ~1 link
+    bw_hd=819e9, n_hd_links=1,          # HBM takes the PCIe role (no host hop)
+    devices_per_node=4,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfBreakdown:
+    t_load: float
+    t_flt: float
+    t_allgather: float
+    t_h2d: float
+    t_bp: float
+    t_d2h: float
+    t_reduce: float
+    t_store: float
+
+    @property
+    def t_compute(self) -> float:                      # Eq. 17
+        return max(self.t_load, self.t_flt, self.t_allgather, self.t_bp)
+
+    @property
+    def t_post(self) -> float:                         # Eq. 18 (T_trans ~ 0)
+        return self.t_d2h + self.t_reduce + self.t_store
+
+    @property
+    def t_runtime(self) -> float:                      # Eq. 19
+        return self.t_compute + self.t_post
+
+    @property
+    def delta(self) -> float:
+        """Paper Table 5 overlap factor: serial/overlapped compute time."""
+        return (self.t_flt + self.t_allgather + self.t_bp) / max(
+            self.t_compute, 1e-12
+        )
+
+
+def predict(g: CBCTGeometry, grid: IFDKGrid,
+            sys: SystemConstants = ABCI) -> PerfBreakdown:
+    """Eqs. 8-16 verbatim (float32 data)."""
+    szf = 4.0
+    r, c = grid.r, grid.c
+    n_ranks = grid.n_ranks
+    n_nodes = max(1, n_ranks // sys.devices_per_node)
+    proj_bytes = szf * g.n_u * g.n_v * g.n_proj
+    vol_bytes = szf * g.n_x * g.n_y * g.n_z
+
+    t_load = proj_bytes / sys.bw_load                                   # Eq. 8
+    t_flt = g.n_proj / (n_nodes * sys.th_flt)                           # Eq. 9
+    t_allgather = g.n_proj / (c * r * sys.th_allgather)                 # Eq.10
+    t_h2d = (szf * sys.devices_per_node * g.n_u * g.n_v * g.n_proj
+             / (c * sys.bw_hd * sys.n_hd_links))                        # Eq.11
+    updates = g.n_x * g.n_y * g.n_z / r * (g.n_proj / c)
+    t_bp = t_h2d + updates / (sys.gups_bp * 2**30)                      # Eq.12
+    t_d2h = (szf * sys.devices_per_node * g.n_x * g.n_y * g.n_z
+             / (r * sys.bw_hd * sys.n_hd_links))                        # Eq.14
+    t_reduce = vol_bytes / (r * sys.th_reduce)                          # Eq.15
+    if c == 1:
+        t_reduce = 0.0  # paper: no inter-rank reduction when C == 1
+    t_store = vol_bytes / sys.bw_store                                  # Eq.16
+    return PerfBreakdown(t_load, t_flt, t_allgather, t_h2d, t_bp,
+                         t_d2h, t_reduce, t_store)
+
+
+def gups_end_to_end(g: CBCTGeometry, b: PerfBreakdown) -> float:
+    updates = g.n_x * g.n_y * g.n_z * float(g.n_proj)
+    return updates / (b.t_runtime * 2**30)

@@ -1,0 +1,137 @@
+"""3-D Shepp-Logan phantom and analytic cone-beam forward projector.
+
+The paper (§5.1) generates test projections with RTK's forward projector from
+the standard Shepp-Logan phantom; reconstruction quality is then verified
+against the reference implementation (RMSE < 1e-5) and visually. We do the
+same end-to-end, but use the *analytic* line integral through the phantom's
+ellipsoids — exact, sampling-free, and fast enough on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import CBCTGeometry, detector_pixel_position, source_position
+
+Array = jax.Array
+
+# (rho, a, b, c, x0, y0, z0, phi_deg) -- modified (high-contrast) 3D
+# Shepp-Logan, Kak-Slaney / phantom3d parameterisation, z-rotation only.
+SHEPP_LOGAN_3D = np.array(
+    [
+        [1.00, 0.6900, 0.920, 0.810, 0.00, 0.000, 0.00, 0.0],
+        [-0.80, 0.6624, 0.874, 0.780, 0.00, -0.0184, 0.00, 0.0],
+        [-0.20, 0.1100, 0.310, 0.220, 0.22, 0.000, 0.00, -18.0],
+        [-0.20, 0.1600, 0.410, 0.280, -0.22, 0.000, 0.00, 18.0],
+        [0.10, 0.2100, 0.250, 0.410, 0.00, 0.350, -0.15, 0.0],
+        [0.10, 0.0460, 0.046, 0.050, 0.00, 0.100, 0.25, 0.0],
+        [0.10, 0.0460, 0.046, 0.050, 0.00, -0.100, 0.25, 0.0],
+        [0.10, 0.0460, 0.023, 0.050, -0.08, -0.605, 0.00, 0.0],
+        [0.10, 0.0230, 0.023, 0.020, 0.00, -0.606, 0.00, 0.0],
+        [0.10, 0.0230, 0.046, 0.020, 0.06, -0.605, 0.00, 0.0],
+    ],
+    dtype=np.float64,
+)
+
+
+def _ellipsoid_frames(table: np.ndarray):
+    """Per-ellipsoid (center, inv-axes rotation) for unit-sphere mapping."""
+    rho = table[:, 0]
+    axes = table[:, 1:4]
+    centers = table[:, 4:7]
+    phi = np.deg2rad(table[:, 7])
+    c, s = np.cos(phi), np.sin(phi)
+    zeros, ones = np.zeros_like(c), np.ones_like(c)
+    # rotation about z by -phi composed with axis scaling: M = diag(1/a) @ Rz(-phi)
+    rot = np.stack(
+        [
+            np.stack([c, s, zeros], -1),
+            np.stack([-s, c, zeros], -1),
+            np.stack([zeros, zeros, ones], -1),
+        ],
+        axis=-2,
+    )  # (E, 3, 3)
+    minv = rot / axes[:, :, None]  # scale rows by 1/axes
+    return rho, centers, minv
+
+
+@partial(jax.jit, static_argnames=("nx", "ny", "nz"))
+def _phantom_volume(rho: Array, centers: Array, minv: Array,
+                    nx: int, ny: int, nz: int,
+                    dx: float, dy: float, dz: float) -> Array:
+    """Voxelize: world coords match geometry.py's M0 (gantry frame)."""
+    i = jnp.arange(nx, dtype=jnp.float32)
+    j = jnp.arange(ny, dtype=jnp.float32)
+    k = jnp.arange(nz, dtype=jnp.float32)
+    gx = dx * (i - (nx - 1) / 2.0)
+    gy = -dy * (j - (ny - 1) / 2.0)
+    gz = -dz * (k - (nz - 1) / 2.0)
+    pts = jnp.stack(
+        jnp.meshgrid(gx, gy, gz, indexing="ij"), axis=-1
+    )  # (nx, ny, nz, 3)
+
+    def one(e_rho, e_c, e_m):
+        q = jnp.einsum("ab,xyzb->xyza", e_m, pts - e_c)
+        return e_rho * (jnp.sum(q * q, -1) <= 1.0).astype(jnp.float32)
+
+    vol = jax.vmap(one)(rho, centers, minv).sum(0)
+    return vol
+
+
+def shepp_logan_volume(g: CBCTGeometry) -> Array:
+    """The phantom voxelized on the geometry's grid, shape (n_x, n_y, n_z)."""
+    rho, centers, minv = _ellipsoid_frames(SHEPP_LOGAN_3D)
+    return _phantom_volume(
+        jnp.asarray(rho, jnp.float32), jnp.asarray(centers, jnp.float32),
+        jnp.asarray(minv, jnp.float32),
+        g.n_x, g.n_y, g.n_z, g.d_x, g.d_y, g.d_z,
+    )
+
+
+@jax.jit
+def _project_one_angle(rho: Array, centers: Array, minv: Array,
+                       src: Array, pix: Array) -> Array:
+    """Analytic chord lengths from source `src` to each pixel in `pix`.
+
+    pix: (n_v, n_u, 3) world positions. Returns (n_v, n_u) line integrals.
+    """
+    d = pix - src  # ray directions (not normalized)
+    dn = jnp.linalg.norm(d, axis=-1, keepdims=True)
+    d = d / dn
+
+    def one(e_rho, e_c, e_m):
+        o = jnp.einsum("ab,b->a", e_m, src - e_c)  # (3,)
+        dd = jnp.einsum("ab,vub->vua", e_m, d)
+        a = jnp.sum(dd * dd, -1)
+        b = 2.0 * jnp.einsum("a,vua->vu", o, dd)
+        c = jnp.sum(o * o) - 1.0
+        disc = b * b - 4.0 * a * c
+        chord = jnp.where(disc > 0.0, jnp.sqrt(jnp.maximum(disc, 0.0)) / a, 0.0)
+        return e_rho * chord
+
+    return jax.vmap(one)(rho, centers, minv).sum(0)
+
+
+def forward_project(g: CBCTGeometry, dtype=jnp.float32) -> Array:
+    """Analytic cone-beam projections of the Shepp-Logan phantom.
+
+    Returns (N_p, N_v, N_u) — the paper's E input.
+    """
+    rho, centers, minv = _ellipsoid_frames(SHEPP_LOGAN_3D)
+    rho = jnp.asarray(rho, jnp.float32)
+    centers = jnp.asarray(centers, jnp.float32)
+    minv = jnp.asarray(minv, jnp.float32)
+    iu = np.arange(g.n_u)
+    iv = np.arange(g.n_v)
+    iuu, ivv = np.meshgrid(iu, iv, indexing="xy")  # (n_v, n_u)
+    out = []
+    for beta in g.angles:
+        src = jnp.asarray(source_position(g, beta), jnp.float32)
+        pix = jnp.asarray(
+            detector_pixel_position(g, beta, iuu, ivv), jnp.float32
+        )
+        out.append(_project_one_angle(rho, centers, minv, src, pix))
+    return jnp.stack(out).astype(dtype)

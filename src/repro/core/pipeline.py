@@ -1,0 +1,210 @@
+"""Software-pipelined distributed FDK (paper §4.1.4, Fig. 4).
+
+The paper overlaps load/filter (CPU thread), AllGather (main thread) and
+back-projection (GPU thread) with circular buffers. The XLA-native
+equivalent is a `lax.scan` over projection micro-batches with a
+double-buffered carry: step s issues the AllGather for batch s while the
+back-projection of batch s-1 (already gathered) runs — the two are
+data-independent inside one scan step, so XLA's async collectives hide the
+communication behind the compute, exactly the paper's streaming benefit
+(their delta > 1 in Table 5).
+
+Over-decomposition of the projection axis (n_steps micro-batches per rank)
+is also the straggler-mitigation hook: the host loop can re-slice the
+batch->step mapping between scans without moving any state (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Callable, Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
+from .distributed import _proj_spec, output_spec, shift_pmats_i
+from .fdk import fdk_scale, _get_backprojector, BpImpl
+from .filtering import make_filter
+from .geometry import CBCTGeometry, projection_matrices
+
+Array = jax.Array
+
+
+def shift_pmats_j(pmats: Array, j0) -> Array:
+    """Reparameterize P for a y-chunk starting at voxel index j0 (same trick
+    as distributed.shift_pmats_i, on the j column)."""
+    shift = pmats[..., :, 1] * j0
+    return pmats.at[..., :, 3].add(shift)
+
+
+def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
+                     n_steps: int = 2, y_chunks: int = 16,
+                     impl: BpImpl = "factorized",
+                     window: str = "ramlak"):
+    """Beyond-paper (EXPERIMENTS.md §Perf cell C): y-chunked back-projection
+    with PER-CHUNK psum_scatter accumulation.
+
+    The plain pipeline back-projects the full (nx/R, ny, nz) slab before the
+    row reduction — a 17 GB f32 transient for the 4K problem plus the BP
+    intermediates (~69 GB/device peak, 4x over v5e HBM). Here each projection
+    batch back-projects one y-chunk at a time and immediately reduce-scatters
+    it over the data axis, so the live state is one chunk's intermediates
+    plus the 1/C-scattered accumulator (fits in a few GB). The reduction
+    moves from one giant end-of-step psum to y_chunks small psum_scatters
+    that overlap with the next chunk's compute — the paper's Fig. 4
+    streaming idea applied to the *output* side, which the paper itself
+    left as future work ("overlapping after the back-projection").
+
+    Output layout: (nx, y_chunks, ny/y_chunks, nz) with x sharded over
+    `model` and dim 2 scattered over `data`; reshape(nx, ny, nz) restores
+    the canonical volume (globally contiguous, see tests).
+    """
+    r = axis_size(mesh, AXIS_MODEL)
+    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
+    dp_in = axis_size(mesh, AXIS_DATA)
+    n_ranks = r * c
+    np_local = g.n_proj // n_ranks
+    yc = g.n_y // y_chunks
+    if g.n_proj % n_ranks or np_local % n_steps or g.n_y % y_chunks \
+            or yc % dp_in:
+        raise ValueError("shape does not tile over the mesh/chunks")
+    nb = np_local // n_steps
+    nx_slab = g.n_x // r
+    filt = make_filter(g, window)
+    backproject = _get_backprojector(impl)
+    pmats_all = jnp.asarray(projection_matrices(g))
+    scale = fdk_scale(g)
+
+    def gather_batch(pm_b, raw_b):
+        q = filt(raw_b)
+        return (lax.all_gather(pm_b, AXIS_MODEL, axis=0, tiled=True),
+                lax.all_gather(q, AXIS_MODEL, axis=0, tiled=True))
+
+    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
+        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
+        pm_steps = pmats_local.reshape(n_steps, nb, 3, 4)
+        raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
+        buf = gather_batch(pm_steps[0], raw_steps[0])
+
+        def bp_chunks(acc, pm_col, q_col):
+            pm_slab = shift_pmats_i(pm_col, i0.astype(pm_col.dtype))
+
+            def one_chunk(ci, a):
+                pm_c = shift_pmats_j(pm_slab, (ci * yc).astype(pm_slab.dtype))
+                part = backproject(pm_c, q_col, nx_slab, yc, g.n_z)
+                part = lax.psum_scatter(part, AXIS_DATA,
+                                        scatter_dimension=1, tiled=True)
+                return lax.dynamic_update_index_in_dim(
+                    a, a[:, ci] + part, ci, axis=1
+                )
+
+            return lax.fori_loop(0, y_chunks, one_chunk, acc)
+
+        def step(carry, xs):
+            acc, prev = carry
+            nxt = gather_batch(*xs)                # comm for batch s
+            acc = bp_chunks(acc, *prev)            # compute for batch s-1
+            return (acc, nxt), None
+
+        init = jnp.zeros((nx_slab, y_chunks, yc // dp_in, g.n_z), jnp.float32)
+        (acc, last), _ = lax.scan(step, (init, buf),
+                                  (pm_steps[1:], raw_steps[1:]))
+        acc = bp_chunks(acc, *last)                # epilogue
+        if AXIS_POD in mesh.axis_names:
+            acc = lax.psum(acc, AXIS_POD)
+        return acc * scale
+
+    pspec = _proj_spec(mesh)
+    out_sp = P(AXIS_MODEL, None, AXIS_DATA, None)
+
+    @jax.jit
+    def reconstruct(projections: Array) -> Array:
+        return jax.shard_map(
+            rank_fn, mesh=mesh,
+            in_specs=(pspec, pspec),
+            out_specs=out_sp,
+            check_vma=False,
+        )(pmats_all, projections)
+
+    return reconstruct
+
+
+def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
+                       n_steps: int = 4,
+                       impl: BpImpl = "factorized",
+                       window: str = "ramlak",
+                       reduce: Literal["psum", "scatter"] = "scatter",
+                       ) -> Callable[[Array], Array]:
+    """Pipelined reconstruction; same interface as make_distributed_fdk."""
+    r = axis_size(mesh, AXIS_MODEL)
+    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
+    n_ranks = r * c
+    np_local = g.n_proj // n_ranks
+    if g.n_proj % n_ranks or np_local % n_steps:
+        raise ValueError(
+            f"N_p={g.n_proj} must divide over {n_ranks} ranks x {n_steps} steps"
+        )
+    nb = np_local // n_steps          # local batch per pipeline step
+    nx_slab = g.n_x // r
+    dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
+    filt = make_filter(g, window)
+    backproject = _get_backprojector(impl)
+    pmats_all = jnp.asarray(projection_matrices(g))
+    scale = fdk_scale(g)
+
+    def gather_batch(pm_b, raw_b):
+        q = filt(raw_b)
+        q_col = lax.all_gather(q, AXIS_MODEL, axis=0, tiled=True)
+        pm_col = lax.all_gather(pm_b, AXIS_MODEL, axis=0, tiled=True)
+        return pm_col, q_col
+
+    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
+        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
+        pm_steps = pmats_local.reshape(n_steps, nb, 3, 4)
+        raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
+
+        # Prologue: gather batch 0.
+        buf = gather_batch(pm_steps[0], raw_steps[0])
+
+        def step(carry, xs):
+            acc, (pm_prev, q_prev) = carry
+            pm_next, raw_next = xs
+            # Comm for batch s (independent of the BP below -> overlapped).
+            nxt = gather_batch(pm_next, raw_next)
+            # Compute for batch s-1.
+            pm_slab = shift_pmats_i(pm_prev, i0.astype(pm_prev.dtype))
+            acc = acc + backproject(pm_slab, q_prev, nx_slab, g.n_y, g.n_z)
+            return (acc, nxt), None
+
+        init = (jnp.zeros((nx_slab, g.n_y, g.n_z), jnp.float32), buf)
+        (acc, (pm_last, q_last)), _ = lax.scan(
+            step, init, (pm_steps[1:], raw_steps[1:])
+        )
+        # Epilogue: BP of the final gathered batch.
+        pm_slab = shift_pmats_i(pm_last, i0.astype(pm_last.dtype))
+        acc = acc + backproject(pm_slab, q_last, nx_slab, g.n_y, g.n_z)
+
+        if reduce == "scatter":
+            acc = lax.psum_scatter(acc, AXIS_DATA, scatter_dimension=1,
+                                   tiled=True)
+            if AXIS_POD in mesh.axis_names:
+                acc = lax.psum(acc, AXIS_POD)
+        else:
+            for a in dp:
+                acc = lax.psum(acc, a)
+        return acc * scale
+
+    pspec = _proj_spec(mesh)
+    out_sp = output_spec(mesh, reduce)
+
+    @jax.jit
+    def reconstruct(projections: Array) -> Array:
+        return jax.shard_map(
+            rank_fn, mesh=mesh,
+            in_specs=(pspec, pspec),
+            out_specs=out_sp,
+            check_vma=False,
+        )(pmats_all, projections)
+
+    return reconstruct

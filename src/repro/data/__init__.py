@@ -1,0 +1,1 @@
+from .pipeline import synthetic_batch, batch_specs, SyntheticTokens, ProjectionSource

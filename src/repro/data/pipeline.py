@@ -1,0 +1,100 @@
+"""Data pipelines: synthetic LM token streams and CT projection sources.
+
+`batch_specs(cfg, batch, seq)` is the single source of truth for model input
+shapes — the dry run (ShapeDtypeStructs), the smoke tests (random data of the
+same specs) and the example drivers all derive from it, so the 40 dry-run
+cells and the tests can never drift apart.
+
+The CT `ProjectionSource` mimics the paper's PFS loading: projections are
+delivered in per-rank slices (Eq. 5: N_p/(C*R) each) in micro-batches, with
+an injectable-latency hook used by the straggler tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training-batch ShapeDtypeStructs for an architecture."""
+    specs = {}
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        k = cfg.frontend.num_positions
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, k, seq), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, k, seq), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.frontend is not None and cfg.frontend.modality == "vision":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend.num_positions, cfg.frontend.d_frontend),
+            jnp.bfloat16,
+        )
+    return specs
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int,
+                    key: jax.Array) -> Dict[str, jax.Array]:
+    """Random batch matching batch_specs (smoke tests / example drivers)."""
+    specs = batch_specs(cfg, batch, seq)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for (name, spec), k in zip(sorted(specs.items()), ks):
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(
+                k, spec.shape, 0, cfg.vocab_size, dtype=jnp.int32
+            )
+        else:
+            out[name] = jax.random.normal(k, spec.shape, jnp.float32).astype(
+                spec.dtype
+            )
+    return out
+
+
+class SyntheticTokens:
+    """Deterministic, restartable synthetic LM stream (seeded per step).
+
+    Restartability matters for checkpoint/restart tests: batch(step) is a
+    pure function of (seed, step), so a resumed job sees the identical
+    stream (the data-pipeline half of reproducible recovery)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+
+    def __call__(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        return synthetic_batch(self.cfg, self.batch, self.seq, key)
+
+
+@dataclasses.dataclass
+class ProjectionSource:
+    """Streams projection micro-batches (the paper's PFS read path)."""
+
+    projections: np.ndarray          # (N_p, N_v, N_u)
+    micro_batch: int
+    latency_s: float = 0.0           # injectable per-batch latency (tests)
+
+    def __post_init__(self):
+        if self.projections.shape[0] % self.micro_batch:
+            raise ValueError("N_p must divide by the micro batch")
+
+    @property
+    def n_batches(self) -> int:
+        return self.projections.shape[0] // self.micro_batch
+
+    def batch(self, idx: int) -> np.ndarray:
+        if self.latency_s:
+            import time
+            time.sleep(self.latency_s)
+        lo = idx * self.micro_batch
+        return self.projections[lo:lo + self.micro_batch]
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        for i in range(self.n_batches):
+            yield self.batch(i)

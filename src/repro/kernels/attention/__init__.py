@@ -1,0 +1,2 @@
+from .ops import flash_attention
+from .ref import attention_ref

@@ -1,0 +1,104 @@
+"""Flash-attention Pallas TPU kernel (online-softmax, causal, GQA-folded).
+
+The LM substrate's perf-critical compute layer for the prefill_32k cells:
+never materializes the (Sq, Sk) score matrix. Standard blocked structure:
+
+  grid = (B*H, Sq/Bq, Sk/Bk)   (k-block innermost: output block revisited)
+  VMEM per step: q (Bq, D) + k/v (Bk, D) + out (Bq, D)
+               + scratch m/l (Bq,), acc (Bq, D)
+
+Carries the running max (m) and normalizer (l) in VMEM scratch across the
+k-block loop — the Flash-Attention-2 recurrence. Causality skips
+fully-masked k-blocks via pl.when on the block indices.
+
+Validated with interpret=True against ref.attention_ref (CPU container);
+block shapes default to MXU-aligned (128, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, scale: float, bq: int, bk: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip k-blocks strictly above the diagonal
+    run = (ki * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)              # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)              # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale                         # (Bq, Bk)
+        if causal:
+            iq = qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ik = ki * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(ik <= iq, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "interpret")
+)
+def flash_attention_bhsd(q: Array, k: Array, v: Array,
+                         bq: int = 128, bk: int = 128,
+                         causal: bool = True,
+                         interpret: bool = True) -> Array:
+    """Fused attention over (BH, S, D) folded batch-head arrays."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0
+    scale = 1.0 / np.sqrt(d)
+    grid = (bh, sq // bq, sk // bk)
+    kernel = functools.partial(_fa_kernel, scale=scale, bq=bq, bk=bk,
+                               causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running normalizer l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""Public wrapper: (B, S, H, D) GQA attention via the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: Array, k: Array, v: Array,
+                    causal: bool = True,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D), H % K == 0 (GQA repeat)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    if interpret is None:
+        interpret = not _on_tpu()
+    if h != kh:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    bq = min(bq, sq)
+    bk = min(bk, k.shape[1])
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    out = flash_attention_bhsd(qf, kf, vf, bq=bq, bk=bk, causal=causal,
+                               interpret=interpret)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel: causal GQA SDPA."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q: Array, k: Array, v: Array, causal: bool = True) -> Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0.
+
+    f32 softmax, bf16/f32 inputs. Returns (B, Sq, H, D) in q's dtype.
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    if h != kh:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        iq = jnp.arange(sq)[:, None]
+        ik = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(ik <= iq, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

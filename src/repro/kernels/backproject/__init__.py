@@ -1,0 +1,2 @@
+from .ops import backproject_pallas, backproject_mxu
+from .ref import backproject_dual_ref

@@ -1,0 +1,145 @@
+"""Pallas TPU back-projection kernel (the paper's shflBP, TPU-adapted).
+
+Design (see DESIGN.md §2 for the CUDA->TPU mapping):
+
+  * Volume is produced in the *dual-slab* layout (nx, ny, 2, nz/2): slab 0 is
+    the front half of z, slab 1 the z-reversed back half, so a Theorem-1
+    mirror pair shares one index. z runs along the TPU **lane** dimension.
+  * Grid = (nx/Bi, ny/Bj, Np/Bs). The output tile (Bi, Bj, 2, nzh) stays
+    resident in VMEM across the innermost (projection-batch) grid dimension —
+    the TPU analogue of the paper's "batch of 32 projections per kernel
+    launch" that amortizes volume traffic (global memory there, HBM here).
+  * Per (i, j) column: u and w = 1/z^2 are computed once (Theorems 2/3) and
+    broadcast along lanes; v is the affine ramp (y0 + k*dy) * f.
+  * Bilinear interpolation is explicit arithmetic on 4 gathered taps of the
+    transposed projection Q^T (Nu, Nv) — v (the fast-varying coordinate)
+    indexes the contiguous minor dimension, the paper's "L1-Tran" layout.
+  * The symmetric (Theorem-1) half reuses u, w, and the gathered rows with
+    v~ = (Nv-1) - v.
+
+VMEM working set per grid step:
+    out tile   Bi*Bj*2*nzh*4 B
+  + qt batch   Bs*Nu*Nv*{2,4} B
+  + pmats      Bs*12*4 B
+The defaults (Bi=Bj=8, Bs=8) keep this under ~8 MiB for 1k-wide detectors;
+`vmem_bytes()` lets callers budget explicitly.
+
+This container is CPU-only: the kernel is exercised with interpret=True
+(Python semantics of the same body). On real TPU hardware the flat `take`
+gather lowers via Mosaic's dynamic-gather on the minor dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _bilinear_flat(qflat: Array, nu: int, nv: int,
+                   rows: Array, cols: Array) -> Array:
+    """4-tap bilinear gather from the flattened (nu*nv,) projection."""
+    r0 = jnp.floor(rows)
+    c0 = jnp.floor(cols)
+    dr = rows - r0
+    dc = cols - c0
+    r0i = r0.astype(jnp.int32)
+    c0i = c0.astype(jnp.int32)
+
+    def tap(ri, ci, wgt):
+        valid = (ri >= 0) & (ri < nu) & (ci >= 0) & (ci < nv)
+        idx = jnp.clip(ri, 0, nu - 1) * nv + jnp.clip(ci, 0, nv - 1)
+        return jnp.where(valid, jnp.take(qflat, idx) * wgt, 0.0)
+
+    return (
+        tap(r0i, c0i, (1 - dr) * (1 - dc))
+        + tap(r0i, c0i + 1, (1 - dr) * dc)
+        + tap(r0i + 1, c0i, dr * (1 - dc))
+        + tap(r0i + 1, c0i + 1, dr * dc)
+    )
+
+
+def _bp_kernel(pm_ref, qt_ref, out_ref, *, bs: int, nzh: int, n_v: int):
+    gi = pl.program_id(0)
+    gj = pl.program_id(1)
+    gs = pl.program_id(2)
+    bi, bj = out_ref.shape[0], out_ref.shape[1]
+    nu, nv = qt_ref.shape[1], qt_ref.shape[2]
+
+    i = (gi * bi + lax.broadcasted_iota(jnp.float32, (bi, bj), 0))
+    j = (gj * bj + lax.broadcasted_iota(jnp.float32, (bi, bj), 1))
+    k = lax.broadcasted_iota(jnp.float32, (1, 1, nzh), 2)
+
+    pm = pm_ref[...]  # (bs, 12) f32
+
+    def step(s, acc):
+        acc_f, acc_b = acc
+        p = pm[s]
+        qflat = qt_ref[s].astype(jnp.float32).reshape(-1)
+        # Theorems 2/3: per-column invariants (2 inner products per column)
+        x0 = p[0] * i + p[1] * j + p[3]
+        y0 = p[4] * i + p[5] * j + p[7]
+        z = p[8] * i + p[9] * j + p[11]
+        f = 1.0 / z
+        u = x0 * f                      # constant along k (T2)
+        w = f * f                       # constant along k (T3)
+        # v is affine in k: one FMA per voxel
+        v = (y0[..., None] + p[6] * k) * f[..., None]        # (bi, bj, nzh)
+        ub = jnp.broadcast_to(u[..., None], v.shape)
+        front = w[..., None] * _bilinear_flat(qflat, nu, nv, ub, v)
+        # Theorem-1 mirror: reuse u, w; reflect v
+        back = w[..., None] * _bilinear_flat(qflat, nu, nv, ub, (n_v - 1.0) - v)
+        return acc_f + front, acc_b + back
+
+    zeros = jnp.zeros((bi, bj, nzh), jnp.float32)
+    acc_f, acc_b = lax.fori_loop(0, bs, step, (zeros, zeros))
+    acc = jnp.stack([acc_f, acc_b], axis=-2)  # (bi, bj, 2, nzh)
+
+    @pl.when(gs == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(gs != 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+def vmem_bytes(bi: int, bj: int, bs: int, nu: int, nv: int, nzh: int,
+               qt_dtype=jnp.float32) -> int:
+    qbytes = jnp.dtype(qt_dtype).itemsize
+    return bi * bj * 2 * nzh * 4 + bs * nu * nv * qbytes + bs * 12 * 4
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nx", "ny", "nz", "bi", "bj", "bs", "interpret")
+)
+def backproject_dual_pallas(pmats: Array, qt: Array,
+                            nx: int, ny: int, nz: int,
+                            bi: int = 8, bj: int = 8, bs: int = 8,
+                            interpret: bool = True) -> Array:
+    """pmats (Np, 12) f32, qt (Np, Nu, Nv) -> dual-slab volume (nx, ny, 2, nz/2).
+
+    Np must be a multiple of bs, nx of bi, ny of bj (ops.py pads).
+    """
+    n_p, nu, nv = qt.shape
+    assert nz % 2 == 0 and n_p % bs == 0 and nx % bi == 0 and ny % bj == 0
+    nzh = nz // 2
+    grid = (nx // bi, ny // bj, n_p // bs)
+    kernel = functools.partial(_bp_kernel, bs=bs, nzh=nzh, n_v=nv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, 12), lambda gi, gj, gs: (gs, 0)),
+            pl.BlockSpec((bs, nu, nv), lambda gi, gj, gs: (gs, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bi, bj, 2, nzh), lambda gi, gj, gs: (gi, gj, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, 2, nzh), jnp.float32),
+        interpret=interpret,
+    )(pmats, qt)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the Pallas back-projection kernel.
+
+Semantics: the factorized Alg. 4 with dual-slab output layout
+(nx, ny, 2, nz/2), zero-outside bilinear interpolation, f32 accumulation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _bilinear_zero(img: Array, rows: Array, cols: Array) -> Array:
+    """Bilinear sample of img (R, C); out-of-range taps contribute zero."""
+    nr, nc = img.shape
+    r0 = jnp.floor(rows)
+    c0 = jnp.floor(cols)
+    dr = rows - r0
+    dc = cols - c0
+    r0i = r0.astype(jnp.int32)
+    c0i = c0.astype(jnp.int32)
+
+    def tap(ri, ci, wgt):
+        valid = (ri >= 0) & (ri < nr) & (ci >= 0) & (ci < nc)
+        return jnp.where(
+            valid, img[jnp.clip(ri, 0, nr - 1), jnp.clip(ci, 0, nc - 1)] * wgt, 0.0
+        )
+
+    return (
+        tap(r0i, c0i, (1 - dr) * (1 - dc))
+        + tap(r0i, c0i + 1, (1 - dr) * dc)
+        + tap(r0i + 1, c0i, dr * (1 - dc))
+        + tap(r0i + 1, c0i + 1, dr * dc)
+    )
+
+
+@partial(jax.jit, static_argnames=("nx", "ny", "nz"))
+def backproject_dual_ref(pmats: Array, qt: Array,
+                         nx: int, ny: int, nz: int) -> Array:
+    """Oracle: pmats (Np, 3, 4) f32, qt (Np, Nu, Nv) transposed projections.
+
+    Returns the dual-slab volume (nx, ny, 2, nz//2) float32:
+      out[..., 0, k] = volume[..., k]          (front half)
+      out[..., 1, k] = volume[..., nz - 1 - k] (mirrored back half)
+    """
+    assert nz % 2 == 0
+    nzh = nz // 2
+    n_v = qt.shape[-1]
+    i = jnp.arange(nx, dtype=jnp.float32)[:, None]
+    j = jnp.arange(ny, dtype=jnp.float32)[None, :]
+    k = jnp.arange(nzh, dtype=jnp.float32)
+
+    def body(acc, sp):
+        p, q = sp
+        q = q.astype(jnp.float32)
+        x0 = p[0, 0] * i + p[0, 1] * j + p[0, 3]
+        y0 = p[1, 0] * i + p[1, 1] * j + p[1, 3]
+        z = p[2, 0] * i + p[2, 1] * j + p[2, 3]
+        f = 1.0 / z
+        u = x0 * f
+        w = f * f
+        v = (y0[..., None] + p[1, 2] * k) * f[..., None]
+        ub = jnp.broadcast_to(u[..., None], v.shape)
+        front = w[..., None] * _bilinear_zero(q, ub, v)
+        back = w[..., None] * _bilinear_zero(q, ub, (n_v - 1.0) - v)
+        return acc + jnp.stack([front, back], axis=-2), None
+
+    init = jnp.zeros((nx, ny, 2, nzh), jnp.float32)
+    out, _ = jax.lax.scan(body, init, (pmats.astype(jnp.float32), qt))
+    return out

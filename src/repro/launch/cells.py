@@ -1,0 +1,183 @@
+"""Dry-run cell construction: (arch x input-shape) -> lowerable function.
+
+`input_specs()` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation); `build_cell()` pairs them with the
+jit-able step function and its in_shardings. The same specs drive the smoke
+tests (reduced sizes) via data.pipeline.batch_specs — one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import batch_specs
+from repro.models.config import ModelConfig
+from repro.models.transformer import cache_specs, decode_step, prefill
+from repro.parallel.sharding import ShardingRules
+from repro.training.train_step import (
+    make_abstract_state, make_train_step, state_shardings,
+)
+
+# The assigned input-shape sets (LM transformer shapes).
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+# Microbatch count for train cells (grad accumulation): sized so a
+# per-device microbatch holds ~2 rows on the single-pod mesh.
+TRAIN_MICROBATCHES = 8
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    skip_reason: Optional[str] = None
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """Returns a skip reason or None (see DESIGN.md §5)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: no sub-quadratic path at 500k "
+                "(skip per assignment; see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the cell's model inputs."""
+    info = SHAPES[shape]
+    if info["kind"] == "train" or info["kind"] == "prefill":
+        return batch_specs(cfg, info["batch"], info["seq"])
+    # decode: one new token against a seq_len-deep cache
+    b = info["batch"]
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        tok = jax.ShapeDtypeStruct((b, cfg.frontend.num_positions, 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return {"tokens": tok}
+
+
+def inference_fsdp(cfg: ModelConfig, tp: int = 16,
+                   hbm_budget: float = 8e9) -> bool:
+    """Serving replicates params over data ranks when the TP shard fits HBM
+    (cheap reads); models too big for a TP shard keep FSDP sharding and pay
+    the gather (jamba-398b)."""
+    from repro.models.config import count_params
+    return count_params(cfg) * 2.0 / tp > hbm_budget
+
+
+def make_rules(cfg: ModelConfig, shape: str, mesh,
+               strategy: str = "baseline",
+               fsdp: Optional[bool] = None) -> ShardingRules:
+    """Sharding strategy for a cell.
+
+    baseline  — the paper-faithful-ish first cut: ZeRO-3 gather-at-use for
+                everything (incl. MoE experts), TP over `model`, FSDP over
+                (pod, data).
+    optimized — the beyond-paper §Perf configuration:
+                * MoE experts stay EP-sharded (tokens move, not weights);
+                * decode skips the ZeRO-3 gather (partial-sum ARs of tiny
+                  activations beat streaming gathered weights at batch<=128);
+                * small/mid dense models fold `model` into the FSDP axes
+                  (pure FSDP beats TP at this scale on ICI).
+    """
+    info = SHAPES[shape]
+    if fsdp is None:
+        fsdp = True if info["kind"] == "train" else inference_fsdp(cfg)
+    if strategy == "baseline":
+        return ShardingRules(mesh=mesh, fsdp=fsdp, zero3_gather=True,
+                             gather_moe_experts=True)
+    if info["kind"] == "decode":
+        return ShardingRules(mesh=mesh, fsdp=fsdp, zero3_gather=False,
+                             gather_moe_experts=False,
+                             decode_feature_shard=fsdp)
+    from repro.models.config import count_params
+    small_dense = cfg.moe is None and count_params(cfg) < 40e9
+    fsdp_axes = (("pod", "data", "model") if small_dense
+                 else ("pod", "data"))
+    return ShardingRules(mesh=mesh, fsdp=fsdp, zero3_gather=True,
+                         gather_moe_experts=False, fsdp_axes=fsdp_axes)
+
+
+def strategy_microbatches(cfg: ModelConfig, strategy: str) -> int:
+    """Grad-accumulation depth per strategy (§Perf A4 + dense-FSDP note):
+    weight-gather wire scales with microbatch count, so the optimized
+    strategy accumulates as little as activation memory allows — dense
+    full-DP models take the whole batch in one microbatch (1 row/device),
+    MoE models take 4 (16.2 GB/device at 2 was the HBM edge)."""
+    if strategy == "baseline":
+        return TRAIN_MICROBATCHES
+    from repro.models.config import count_params
+    if cfg.moe is None and count_params(cfg) < 40e9:
+        return 1
+    return 4
+
+
+def build_cell(arch: str, shape: str, mesh, fsdp: Optional[bool] = None,
+               microbatches: Optional[int] = None,
+               strategy: str = "baseline") -> Cell:
+    cfg = get_config(arch)
+    skip = cell_is_applicable(cfg, shape)
+    if skip:
+        return Cell(arch, shape, cfg, None, (), (), skip_reason=skip)
+    info = SHAPES[shape]
+    if microbatches is None:
+        microbatches = strategy_microbatches(cfg, strategy)
+    rules = make_rules(cfg, shape, mesh, strategy, fsdp)
+    specs = input_specs(cfg, shape)
+    batch_sh = {
+        k: rules.sharding_for_shape(v.shape, "dp", *(None,) * (len(v.shape) - 1))
+        for k, v in specs.items()
+    }
+
+    if info["kind"] == "train":
+        step = make_train_step(cfg, rules=rules, microbatches=microbatches)
+        state = make_abstract_state(cfg)
+        st_sh = state_shardings(cfg, rules)
+        return Cell(arch, shape, cfg, step, (state, specs), (st_sh, batch_sh))
+
+    from repro.models.transformer import abstract_params, param_shardings
+    params = abstract_params(cfg)
+    if strategy == "optimized":
+        # Serve from bf16 weights (§Perf cell B iter 3): halves both the HBM
+        # stream and any remaining weight-shard gathers; f32 masters are a
+        # training-only artifact.
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.dtype("float32")
+                else s.dtype
+            ),
+            params,
+        )
+    p_sh = param_shardings(cfg, rules)
+
+    if info["kind"] == "prefill":
+        def prefill_fn(p, b):
+            return prefill(p, cfg, b, rules)
+        return Cell(arch, shape, cfg, prefill_fn, (params, specs),
+                    (p_sh, batch_sh))
+
+    # decode
+    long = bool(info.get("long"))
+    cache, cache_sh = cache_specs(cfg, info["batch"], info["seq"],
+                                  rules, shard_seq=long)
+    cur = jax.ShapeDtypeStruct((), jnp.int32)
+    cur_sh = rules.sharding()
+
+    def decode_fn(p, c, tok, cur_len):
+        return decode_step(p, cfg, c, tok["tokens"], cur_len, rules)
+
+    return Cell(arch, shape, cfg, decode_fn,
+                (params, cache, specs, cur),
+                (p_sh, cache_sh, batch_sh, cur_sh))

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --fdk          # paper's cells
+
+For every cell this prints compiled.memory_analysis() (proves it fits) and
+cost_analysis() (FLOPs/bytes for EXPERIMENTS.md §Roofline), plus the parsed
+collective wire bytes. Results are appended as JSON lines for the roofline
+table generator (benchmarks/roofline_table.py).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch.cells import SHAPES, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Roofline, collective_stats, model_flops_for,
+)
+from repro.configs import list_archs, get_config
+from repro.models.config import count_active_params
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return None
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception:
+        return None
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return dict(ca) if ca else None
+    except Exception:
+        return None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_file=None,
+             verbose: bool = True, strategy: str = "baseline") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, strategy=strategy)
+    if cell.skip_reason:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": cell.skip_reason}
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: SKIP "
+                  f"({cell.skip_reason})")
+        if out_file:
+            out_file.write(json.dumps(rec) + "\n")
+            out_file.flush()
+        return rec
+
+    with mesh:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(
+            *cell.args
+        )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+
+    info = SHAPES[shape]
+    cfg = get_config(arch)
+    from repro.models.config import count_params
+    from repro.launch.cells import make_rules, strategy_microbatches
+    from repro.launch.roofline import analytic_costs
+    mflops = model_flops_for(cfg, info, count_active_params(cfg))
+    rules = make_rules(cfg, shape, mesh, strategy)
+    ac = analytic_costs(cfg, info, chips, count_params(cfg),
+                        microbatches=strategy_microbatches(cfg, strategy),
+                        fsdp=rules.fsdp,
+                        zero3_gather=rules.zero3_gather,
+                        moe_ep=not rules.gather_moe_experts)
+    rl = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=ac.flops_per_dev,
+        hlo_bytes=ac.hbm_bytes_per_dev,
+        wire_bytes=colls.wire_bytes,
+        model_flops=mflops,
+        peak_mem_bytes=(mem or {}).get("temp_bytes"),
+    )
+    rec = {
+        "status": "ok",
+        "strategy": strategy,
+        **rl.row(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "collectives": {"counts": colls.op_count, "bytes": colls.op_bytes},
+        "hlo_reported_flops": float(cost.get("flops", 0.0)) if cost else None,
+        "hlo_reported_bytes": (float(cost.get("bytes accessed", 0.0))
+                               if cost else None),
+        "hlo_bytes_len": len(hlo),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  memory_analysis: {mem}")
+        if cost:
+            print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: {colls.op_count} wire={colls.wire_bytes:.3e}B")
+        print(f"  roofline: compute={rl.t_compute:.4f}s memory={rl.t_memory:.4f}s "
+              f"collective={rl.t_collective:.4f}s dominant={rl.dominant} "
+              f"useful_ratio={rl.useful_ratio and round(rl.useful_ratio, 3)}")
+    if out_file:
+        out_file.write(json.dumps(rec) + "\n")
+        out_file.flush()
+    return rec
+
+
+def run_fdk(multi_pod: bool, problem: str = "4k", out_file=None,
+            fdk_impl: str = "pipelined", n_steps: int = 8,
+            y_chunks: int = 16, impl: str = "factorized") -> dict:
+    """The paper's own cells: 2048^2 x 4096 -> {2k,4k,8k}^3 reconstruction."""
+    import jax.numpy as jnp
+    from repro.core.geometry import CBCTGeometry
+    from repro.core.distributed import make_distributed_fdk, input_sharding
+    from repro.core.pipeline import make_chunked_fdk, make_pipelined_fdk
+
+    n = {"2k": 2048, "4k": 4096, "8k": 8192}[problem]
+    g = CBCTGeometry(
+        n_proj=4096, n_u=2048, n_v=2048, d_u=2 * 2.4 / 2048,
+        d_v=2 * 2.4 / 2048, d=4.0, dsd=8.0,
+        n_x=n, n_y=n, n_z=n, d_x=2.0 / n, d_y=2.0 / n, d_z=2.0 / n,
+    )
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if fdk_impl == "chunked":
+        fn = make_chunked_fdk(mesh, g, n_steps=n_steps, y_chunks=y_chunks,
+                              impl=impl)
+    elif fdk_impl == "pipelined":
+        fn = make_pipelined_fdk(mesh, g, n_steps=n_steps, impl=impl)
+    else:
+        fn = make_distributed_fdk(mesh, g, impl=impl)
+    proj = jax.ShapeDtypeStruct((g.n_proj, g.n_v, g.n_u), jnp.float32)
+    lowered = fn.lower(proj) if hasattr(fn, "lower") else jax.jit(
+        fn
+    ).lower(proj)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    colls = collective_stats(compiled.as_text())
+    # Useful work: N_x*N_y*N_z*N_p voxel updates, ~18 flops each (see
+    # benchmarks/bench_backprojection.py) + filtering FFTs.
+    updates = g.n_x * g.n_y * g.n_z * float(g.n_proj)
+    rl = Roofline(
+        arch=f"ifdk-{problem}", shape="reconstruct", mesh=mesh_name,
+        chips=mesh.devices.size,
+        hlo_flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        wire_bytes=colls.wire_bytes,
+        model_flops=18.0 * updates,
+        peak_mem_bytes=(mem or {}).get("temp_bytes"),
+    )
+    rec = {"status": "ok", **rl.row(),
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "memory_analysis": mem,
+           "collectives": {"counts": colls.op_count, "bytes": colls.op_bytes},
+           "fdk_impl": fdk_impl, "n_steps": n_steps, "impl": impl}
+    print(f"[dryrun] iFDK {problem} x {mesh_name}: OK "
+          f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+    print(f"  memory_analysis: {mem}")
+    print(f"  collectives: {colls.op_count} wire={colls.wire_bytes:.3e}B")
+    print(f"  roofline: compute={rl.t_compute:.4f}s memory={rl.t_memory:.4f}s "
+          f"collective={rl.t_collective:.4f}s dominant={rl.dominant}")
+    if out_file:
+        out_file.write(json.dumps(rec) + "\n")
+        out_file.flush()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fdk", action="store_true")
+    ap.add_argument("--fdk-problem", default="4k", choices=["2k", "4k", "8k"])
+    ap.add_argument("--fdk-impl", default="pipelined",
+                    choices=["plain", "pipelined", "chunked"])
+    ap.add_argument("--fdk-steps", type=int, default=8)
+    ap.add_argument("--fdk-chunks", type=int, default=16)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    out_file = open(args.out, "a") if args.out else None
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    try:
+        if args.fdk:
+            for mp in meshes:
+                run_fdk(mp, args.fdk_problem, out_file,
+                        fdk_impl=args.fdk_impl, n_steps=args.fdk_steps,
+                        y_chunks=args.fdk_chunks)
+            return
+        if args.all:
+            for arch in list_archs():
+                for shape in SHAPES:
+                    for mp in meshes:
+                        try:
+                            run_cell(arch, shape, mp, out_file,
+                                     strategy=args.strategy)
+                        except Exception as e:
+                            failures.append((arch, shape, mp, repr(e)))
+                            traceback.print_exc()
+            if failures:
+                print(f"[dryrun] {len(failures)} FAILURES:")
+                for f in failures:
+                    print("  ", f)
+                raise SystemExit(1)
+            print("[dryrun] all cells compiled OK")
+            return
+        run_cell(args.arch, args.shape, args.multi_pod, out_file,
+                 strategy=args.strategy)
+    finally:
+        if out_file:
+            out_file.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .config import ModelConfig, MoEConfig, SSMConfig, SubLayer, count_params, count_active_params

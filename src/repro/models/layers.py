@@ -1,0 +1,290 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (train/prefill/decode), MLP.
+
+Functional style: params are plain dict pytrees; every layer exposes
+  defs()  -> pytree of ParamDef (shape + init scale + logical sharding spec)
+  apply() -> forward
+
+Attention uses dense scores for short sequences and a query-chunked exact
+attention (lax.scan over query blocks) beyond `CHUNK_THRESHOLD` so 32k+
+prefill never materializes an S x S score matrix (the XLA-native
+flash-attention pattern; the Pallas kernel in kernels/attention is the
+TPU-tiled equivalent for the same math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .config import ModelConfig
+
+Array = jax.Array
+
+CHUNK_THRESHOLD = 8192
+QUERY_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]          # logical sharding per dim
+    scale: float = 1.0                       # stddev multiplier (0 => zeros)
+    dtype: str = "float32"
+    fan_in: Optional[int] = None             # contraction size (default dim 0)
+
+    def zeros_like(self):
+        return jnp.zeros(self.shape, self.dtype)
+
+
+def init_param(key, d: ParamDef):
+    if d.scale == 0.0:
+        return jnp.zeros(d.shape, d.dtype)
+    fan_in = d.fan_in or d.shape[0]
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_tree(key, defs):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [init_param(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_tree(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def spec_tree(defs):
+    return jax.tree.map(
+        lambda d: d.spec, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d_model: int):
+    return {"scale": ParamDef((d_model,), (None,), scale=0.0)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; optional sliding window)
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig):
+    d, h, k = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("fsdp", "tp", None)),
+        "wk": ParamDef((d, k, hd), ("fsdp", "tp", None)),
+        "wv": ParamDef((d, k, hd), ("fsdp", "tp", None)),
+        "wo": ParamDef((h, hd, d), ("tp", None, "fsdp"), fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("tp", None), scale=0.0)
+        defs["bk"] = ParamDef((k, hd), ("tp", None), scale=0.0)
+        defs["bv"] = ParamDef((k, hd), ("tp", None), scale=0.0)
+    return defs
+
+
+def _qkv(params, cfg: ModelConfig, x: Array, positions: Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, window: Optional[int]) -> Array:
+    """(..., Sq, Sk) additive mask: causal + optional sliding window."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _sdpa(q: Array, k: Array, v: Array, bias: Array, n_groups: int) -> Array:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,K,hd); bias (B?,Sq,Sk).
+
+    GQA via broadcast-repeat of the KV heads to the full head count: under
+    tensor parallelism the repeat is local to each head shard (replicated KV
+    expands into the sharded H dim with no communication), whereas the
+    reshape-into-groups formulation loses the head sharding through the
+    reshape and makes GSPMD reshard every layer."""
+    b, sq, h, hd = q.shape
+    if n_groups > 1:
+        k = jnp.repeat(k, n_groups, axis=2)
+        v = jnp.repeat(v, n_groups, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + bias[:, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def attention_with_kv(params, cfg: ModelConfig, x: Array, positions: Array,
+                      rules=None) -> Tuple[Array, Array, Array]:
+    """Causal GQA self-attention; returns (out, k, v) so prefill can cache."""
+    b, s, _ = x.shape
+    n_groups = cfg.num_heads // cfg.num_kv_heads
+    q, k, v = _qkv(params, cfg, x, positions)
+    if rules is not None:
+        q = rules.constrain(q, "dp", None, "tp", None)
+        k = rules.constrain(k, "dp", None, "tp", None)
+        v = rules.constrain(v, "dp", None, "tp", None)
+
+    if s <= CHUNK_THRESHOLD:
+        bias = _mask_bias(positions, positions, cfg.sliding_window)
+        out = _sdpa(q, k, v, bias, n_groups)
+    else:
+        # Query-chunked exact attention: never materialize (S, S).
+        s_pad = -(-s // QUERY_CHUNK) * QUERY_CHUNK
+        qp, pp = q, positions
+        if s_pad != s:  # e.g. VLM prompts: text + image tokens
+            qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+            # pad with the last position (valid bias row); output is sliced
+            pp = jnp.concatenate(
+                [positions] + [positions[:, -1:]] * (s_pad - s), axis=1
+            )
+        nq = s_pad // QUERY_CHUNK
+        qc = qp.reshape(b, nq, QUERY_CHUNK, cfg.num_kv_heads * n_groups,
+                        cfg.resolved_head_dim).transpose(1, 0, 2, 3, 4)
+        pc = pp.reshape(b, nq, QUERY_CHUNK).transpose(1, 0, 2)
+
+        def chunk_fn(carry, xs):
+            qi, pi = xs
+            bias = _mask_bias(pi, positions, cfg.sliding_window)
+            oi = _sdpa(qi, k, v, bias, n_groups)
+            return carry, oi
+
+        _, out = lax.scan(chunk_fn, None, (qc, pc))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(
+            b, s_pad, cfg.num_heads, cfg.resolved_head_dim
+        )[:, :s]
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    if rules is not None:
+        out = rules.constrain(out, "dp", "sp", None)
+    return out, k, v
+
+
+def attention(params, cfg: ModelConfig, x: Array, positions: Array,
+              rules=None) -> Array:
+    """Training / prefill self-attention (causal, GQA, optional SWA)."""
+    out, _, _ = attention_with_kv(params, cfg, x, positions, rules)
+    return out
+
+
+# -- decode path ------------------------------------------------------------
+
+def attention_decode(params, cfg: ModelConfig, x: Array,
+                     cache_k: Array, cache_v: Array, cur_len: Array,
+                     rules=None):
+    """One-token decode. x: (B, 1, d); cache_*: (B, S_alloc, K, hd).
+
+    With sliding-window attention the cache is a RING BUFFER of the window
+    size (S_alloc = min(S_max, window)): slot i holds the newest absolute
+    position p_i = cur_len - ((cur_len - i) mod S_alloc), which is exactly
+    the SWA-visible set — 500k-token decode with a 4096-deep cache.
+
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    n_groups = cfg.num_heads // cfg.num_kv_heads
+    s_alloc = cache_k.shape[1]
+    positions = jnp.full((b, 1), cur_len, dtype=jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions)
+    ring = cfg.sliding_window is not None
+    slot = (cur_len % s_alloc) if ring else cur_len
+    cache_k = lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1
+    )
+    cache_v = lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1
+    )
+    idx = jnp.arange(s_alloc, dtype=jnp.int32)
+    if ring:
+        k_pos = cur_len - jnp.mod(cur_len - idx, s_alloc)
+        valid = (k_pos >= 0) & (k_pos > cur_len - cfg.sliding_window)
+    else:
+        k_pos = idx
+        valid = k_pos <= cur_len
+    valid = jnp.broadcast_to(valid, (b, s_alloc))
+    bias = jnp.where(valid, 0.0, -jnp.inf).astype(jnp.float32)[:, None, :]
+    out = _sdpa(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                bias, n_groups)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": ParamDef((d, f), ("fsdp", "tp")),
+            "w_up": ParamDef((d, f), ("fsdp", "tp")),
+            "w_down": ParamDef((f, d), ("tp", "fsdp")),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("fsdp", "tp")),
+        "w_down": ParamDef((f, d), ("tp", "fsdp")),
+    }
+
+
+def mlp(params, cfg: ModelConfig, x: Array, rules=None) -> Array:
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+        h = h * (x @ params["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
+    if rules is not None:
+        h = rules.constrain(h, "dp", None, "tp")
+    out = h @ params["w_down"].astype(x.dtype)
+    if rules is not None:
+        out = rules.constrain(out, "dp", "sp", None)
+    return out

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+GShard/Switch-style: tokens are scattered into a per-expert capacity buffer
+(B, E, C, D) — batch stays on the data axis, experts are sharded over the
+model axis (expert parallelism), so the dispatch/combine reshard is the
+all-to-all the paper's 2-D decomposition would perform. Over-capacity tokens
+are dropped (capacity_factor controls head-room), the standard trade at
+scale. Shared experts (qwen2-moe) run densely on every token.
+
+Returns (out, aux_loss) where aux_loss is the load-balancing penalty
+(Switch §2.2: E * sum_e fraction_e * prob_e).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamDef
+
+Array = jax.Array
+
+
+def moe_defs(cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": ParamDef((d, m.num_experts), ("fsdp", None)),
+        "w_gate": ParamDef((m.num_experts, d, m.d_ff_expert),
+                           ("tp", "fsdp", None), fan_in=d),
+        "w_up": ParamDef((m.num_experts, d, m.d_ff_expert),
+                         ("tp", "fsdp", None), fan_in=d),
+        "w_down": ParamDef((m.num_experts, m.d_ff_expert, d),
+                           ("tp", None, "fsdp"), fan_in=m.d_ff_expert),
+    }
+    if m.num_shared_experts:
+        f_sh = m.num_shared_experts * m.d_ff_shared
+        defs["shared"] = {
+            "w_gate": ParamDef((d, f_sh), ("fsdp", "tp")),
+            "w_up": ParamDef((d, f_sh), ("fsdp", "tp")),
+            "w_down": ParamDef((f_sh, d), ("tp", "fsdp")),
+        }
+    return defs
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k / m.num_experts * m.capacity_factor)
+    return max(int(c), 1)
+
+
+def moe(params, cfg: ModelConfig, x: Array, rules=None):
+    """x: (B, S, D). GShard-style grouped dispatch.
+
+    Tokens are grouped (B rows x G sequence groups); with a mesh, G = the
+    tensor-parallel axis size so the capacity buffers are TOKEN-SHARDED over
+    `model` and the dispatch/combine reshard is a true all-to-all (g <-> e),
+    not an all-gather of token-replicated buffers — measured 16x less MoE
+    wire on qwen2-moe train_4k (EXPERIMENTS.md §Perf cell A iter 2). The
+    per-group position cumsum stays shard-local either way."""
+    from jax.sharding import PartitionSpec as P
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    g = rules.tp_size() if rules is not None else 1
+    if g <= 1 or s % g:
+        g = 1
+    sg = s // g
+    c = capacity(cfg, sg)
+    xd = x.reshape(b, g, sg, d)
+    if rules is not None and g > 1:
+        xd = rules.constrain_p(xd, P(rules.axes("dp"), rules.axes("tp"),
+                                     None, None))
+
+    logits = (xd.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))           # (B,G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (B,G,Sg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- position of each (token, choice) inside its expert's buffer
+    flat_e = gate_idx.reshape(b, g, sg * k)                      # (B,G,Sg*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=2) * onehot                    # rank+1 where set
+    pos_in_e = jnp.sum(pos, axis=-1) - 1                         # (B,G,Sg*k)
+    keep = (pos_in_e >= 0) & (pos_in_e < c)
+    slot = jnp.clip(pos_in_e, 0, c - 1)
+
+    x_rep = jnp.repeat(xd, k, axis=2).reshape(b, g, sg * k, d)
+    if g > 1:
+        # --- GShard one-hot EINSUM dispatch (no scatter: SPMD scatters with
+        # sharded batch dims lower to full gathers — measured 5.5x WORSE,
+        # EXPERIMENTS.md §Perf cell A iter 2). dispatch (B,G,Sk,E,C) is
+        # bf16 and token-sharded; both reshards are true all-to-alls.
+        onehot_c = jax.nn.one_hot(slot, c, dtype=x.dtype) \
+            * keep[..., None].astype(x.dtype)                    # (B,G,Sk,C)
+        dispatch = onehot.astype(x.dtype)[..., None] \
+            * onehot_c[..., None, :]                             # (B,G,Sk,E,C)
+        buf = jnp.einsum("bgtec,bgtd->bgecd", dispatch, x_rep)
+        if rules is not None:
+            buf = rules.constrain_p(
+                buf, P(rules.axes("dp"), None, rules.axes("tp"), None, None)
+            )
+    else:
+        # --- scatter dispatch (single-group path: exact same math)
+        contrib = jnp.where(keep[..., None], x_rep, 0).astype(x.dtype)
+        buf = jnp.zeros((b, g, e, c, d), x.dtype)
+        bidx = jnp.broadcast_to(
+            jnp.arange(b, dtype=jnp.int32)[:, None, None], flat_e.shape
+        )
+        gidx = jnp.zeros_like(flat_e)
+        buf = buf.at[bidx, gidx, flat_e, slot].add(contrib)
+        if rules is not None:
+            buf = rules.constrain_p(
+                buf, P(rules.axes("dp"), None, rules.axes("tp"), None, None)
+            )
+
+    # --- expert FFN (swiglu), experts sharded over the model axis
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("bgecd,edf->bgecf", buf, wg))
+    h = h * jnp.einsum("bgecd,edf->bgecf", buf, wu)
+    y = jnp.einsum("bgecf,efd->bgecd", h, wd)                    # (B,G,E,C,D)
+    if rules is not None:
+        # all-to-all back: expert owners -> token groups
+        y = rules.constrain_p(
+            y, P(rules.axes("dp"), rules.axes("tp"), None, None, None)
+        )
+
+    # --- combine: weighted un-dispatch, sum over the k choices
+    wv = gate_vals.reshape(b, g, sg * k).astype(x.dtype)
+    if g > 1:
+        comb = dispatch * wv[..., None, None]
+        y_sum = jnp.einsum("bgtec,bgecd->bgtd", comb, y)
+        out = y_sum.reshape(b, g, sg, k, d).sum(axis=3).reshape(b, s, d)
+    else:
+        y_tok = y[bidx, gidx, flat_e, slot]
+        y_tok = jnp.where(keep[..., None], y_tok, 0)
+        out = jnp.sum(
+            (y_tok * wv[..., None]).reshape(b, g, sg, k, d), axis=3
+        ).reshape(b, s, d)
+    xd = x  # shared experts run on the raw layout
+
+    if m.num_shared_experts:
+        sh = params["shared"]
+        hs = jax.nn.silu(xd @ sh["w_gate"].astype(xd.dtype))
+        hs = hs * (xd @ sh["w_up"].astype(xd.dtype))
+        out = out + hs @ sh["w_down"].astype(xd.dtype)
+
+    # --- Switch load-balancing auxiliary loss
+    frac = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+        axis=(0, 1, 2),
+    )
+    pmean = jnp.mean(probs, axis=(0, 1, 2))
+    aux = m.router_aux_weight * e * jnp.sum(frac * pmean)
+    if rules is not None:
+        out = rules.constrain(out, "dp", "sp", None)
+    return out, aux

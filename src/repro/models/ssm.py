@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) block.
+
+Training uses the chunked SSD algorithm: quadratic attention-like compute
+inside a chunk, linear state recurrence across chunks (lax.scan). Decode is
+the O(1) recurrent update — no KV cache, a fixed-size (H, P, N) state plus a
+(d_conv-1)-deep conv buffer, which is what makes the long_500k cell viable
+for SSM/hybrid archs.
+
+Layout: x (B, L, H, P) with heads sharded over the model axis (the state is
+head-local, so TP needs no collective inside the recurrence).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import ParamDef, rmsnorm
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array     # (B, d_conv-1, conv_ch)
+    state: Array    # (B, H, P, N)
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return d_in, nheads, conv_ch
+
+
+def ssm_defs(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, conv_ch = ssm_dims(cfg)
+    return {
+        "w_z": ParamDef((d, d_in), ("fsdp", "tp")),
+        "w_xbc": ParamDef((d, conv_ch), ("fsdp", "tp")),
+        "w_dt": ParamDef((d, nheads), ("fsdp", "tp")),
+        "conv_w": ParamDef((s.d_conv, conv_ch), (None, "tp")),
+        "conv_b": ParamDef((conv_ch,), ("tp",), scale=0.0),
+        "a_log": ParamDef((nheads,), ("tp",), scale=0.0),
+        "d_skip": ParamDef((nheads,), ("tp",), scale=0.0),
+        "dt_bias": ParamDef((nheads,), ("tp",), scale=0.0),
+        "norm": ParamDef((d_in,), ("tp",), scale=0.0),
+        "w_out": ParamDef((d_in, d), ("tp", "fsdp")),
+    }
+
+
+def _split_xbc(cfg: ModelConfig, xbc: Array):
+    s = cfg.ssm
+    d_in, nheads, _ = ssm_dims(cfg)
+    x = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + s.d_state]
+    cmat = xbc[..., d_in + s.d_state:]
+    b, l = x.shape[0], x.shape[1]
+    x = x.reshape(b, l, nheads, s.head_dim)
+    return x, bmat, cmat   # B/C: (B, L, N) (single group, broadcast to heads)
+
+
+def _causal_conv(cfg: ModelConfig, params, xbc: Array) -> Array:
+    """Depthwise causal conv, window d_conv, over (B, L, C)."""
+    s = cfg.ssm
+    pad = s.d_conv - 1
+    xp = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    w = params["conv_w"].astype(xbc.dtype)                 # (d_conv, C)
+    out = sum(
+        xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(s.d_conv)
+    )
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(cfg: ModelConfig, x: Array, dt: Array, a: Array,
+                 bmat: Array, cmat: Array, init_state: Array):
+    """Chunked SSD scan.
+
+    x (B,L,H,P); dt (B,L,H) post-softplus; a (H,) negative; B/C (B,L,N).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    s = cfg.ssm
+    bsz, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(s.chunk, l)
+    l_orig = l
+    if l % q:
+        # Zero-pad the tail: dt=0 there => xbar=0 and decay=exp(0)=1, so the
+        # padding is exactly inert for both outputs and states.
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // q
+
+    xb = (x * dt[..., None]).reshape(bsz, nc, q, h, p)      # \bar{x}
+    da = (dt * a).reshape(bsz, nc, q, h)                    # log-decays
+    bm = bmat.reshape(bsz, nc, q, n)
+    cm = cmat.reshape(bsz, nc, q, n)
+
+    cs = jnp.cumsum(da, axis=2)                             # (B,NC,Q,H)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,NC,Qi,Qj,H)
+    iq = jnp.arange(q)
+    causal = iq[:, None] >= iq[None, :]
+    # Mask BEFORE exp: non-causal entries have seg > 0 and can overflow;
+    # where(mask, exp(seg), 0) would give inf*0 = NaN in the backward pass.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    lmat = jnp.exp(seg)
+
+    # intra-chunk (the "attention-like" quadratic term)
+    att = jnp.einsum("bcin,bcjn->bcij", cm, bm)[..., None] * lmat
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(x.dtype), xb)
+
+    # chunk summary state: sum_j exp(cs_last - cs_j) B_j (x) xb_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)           # (B,NC,Q,H)
+    chunk_state = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", bm, decay_to_end.astype(x.dtype), xb
+    )
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # (B,NC,H)
+
+    def scan_fn(state, xs):
+        cstate, cdecay = xs                                 # (B,H,P,N), (B,H)
+        new = state * cdecay[..., None, None] + cstate
+        return new, state                                   # emit state *before* chunk
+
+    states_seq = jnp.moveaxis(chunk_state, 1, 0)            # (NC,B,H,P,N)
+    decays_seq = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, prev_states = lax.scan(
+        scan_fn, init_state, (states_seq, decays_seq)
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,NC,H,P,N)
+
+    # inter-chunk: y_i += C_i . (decay_in * state_prev)
+    decay_in = jnp.exp(cs).astype(x.dtype)                  # (B,NC,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", cm, prev_states.astype(x.dtype), decay_in
+    )
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l_orig]
+    return y, final_state
+
+
+def ssm_block(params, cfg: ModelConfig, u: Array, rules=None,
+              cache: SSMCache | None = None, return_cache: bool = False):
+    """Full Mamba-2 mixer. u: (B, L, D). With cache: one-step decode (L=1).
+
+    return_cache=True (prefill): also build the post-sequence cache (final
+    SSD state + conv tail) so decoding can continue the stream."""
+    s = cfg.ssm
+    d_in, nheads, conv_ch = ssm_dims(cfg)
+    bsz, l, _ = u.shape
+    z = u @ params["w_z"].astype(u.dtype)
+    xbc = u @ params["w_xbc"].astype(u.dtype)
+    dt_raw = u @ params["w_dt"].astype(u.dtype)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))       # (H,) negative
+
+    if cache is None:
+        xbc_raw = xbc
+        xbc = _causal_conv(cfg, params, xbc)
+        x, bmat, cmat = _split_xbc(cfg, xbc)
+        init_state = jnp.zeros(
+            (bsz, nheads, s.head_dim, s.d_state), jnp.float32
+        )
+        y, final_state = _ssd_chunked(
+            cfg, x.astype(jnp.float32), dt, a,
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32), init_state,
+        )
+        new_cache = None
+        if return_cache:
+            tail = xbc_raw[:, -(s.d_conv - 1):, :]
+            new_cache = SSMCache(conv=tail, state=final_state)
+    else:
+        # --- recurrent decode: O(1) state update
+        conv_buf = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, d_conv, C)
+        w = params["conv_w"].astype(u.dtype)
+        conv_out = jnp.einsum("btc,tc->bc", conv_buf, w)[:, None, :]
+        xbc = jax.nn.silu(conv_out + params["conv_b"].astype(u.dtype))
+        x, bmat, cmat = _split_xbc(cfg, xbc)
+        xf = x.astype(jnp.float32)[:, 0]                     # (B,H,P)
+        btf = bmat.astype(jnp.float32)[:, 0]                 # (B,N)
+        ctf = cmat.astype(jnp.float32)[:, 0]
+        dt0 = dt[:, 0]                                       # (B,H)
+        da = jnp.exp(dt0 * a)                                # (B,H)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xf, btf, dt0)
+        state = cache.state * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ctf)[:, None]  # (B,1,H,P)
+        final_state = state
+        new_cache = SSMCache(conv=conv_buf[:, 1:], state=final_state)
+
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(bsz, l, d_in).astype(u.dtype)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z), cfg.rms_eps)
+    out = y @ params["w_out"].astype(u.dtype)
+    if rules is not None:
+        out = rules.constrain(out, "dp", "sp", None)
+    return out, new_cache
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in, nheads, conv_ch = ssm_dims(cfg)
+    return SSMCache(
+        conv=jax.ShapeDtypeStruct(
+            (batch, s.d_conv - 1, conv_ch), jnp.dtype(cfg.dtype)
+        ),
+        state=jax.ShapeDtypeStruct(
+            (batch, nheads, s.head_dim, s.d_state), jnp.float32
+        ),
+    )

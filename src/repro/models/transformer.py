@@ -1,0 +1,449 @@
+"""Full model: embeddings + scanned block stack + heads; train/prefill/decode.
+
+Scan-over-layers: parameters of each pattern-repeat are stacked on a leading
+`repeats` axis and the stack is driven by lax.scan — one copy of the layer
+HLO regardless of depth (compile time matters: the dry run compiles 40+
+cells on one CPU core). Heterogeneous stacks (jamba) scan over homogeneous
+*super-blocks* (the pattern), see config.py.
+
+Modality frontends (VLM / audio) are stubs per the assignment: `input_specs`
+delivers precomputed patch/frame embeddings; the projector (the only trained
+frontend piece) is real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import ShardingRules, tree_shardings
+from . import layers as L
+from .config import ModelConfig, SubLayer
+from .moe import moe, moe_defs
+from .ssm import SSMCache, ssm_block, ssm_cache_defs, ssm_defs, ssm_dims
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _sublayer_defs(cfg: ModelConfig, sub: SubLayer) -> Dict:
+    defs: Dict[str, Any] = {"norm_mix": L.rmsnorm_defs(cfg.d_model)}
+    if sub.kind == "attn":
+        defs["attn"] = L.attention_defs(cfg)
+    else:
+        defs["ssm"] = ssm_defs(cfg)
+    if sub.ffn != "none":
+        defs["norm_ffn"] = L.rmsnorm_defs(cfg.d_model)
+        if sub.ffn == "mlp":
+            defs["mlp"] = L.mlp_defs(cfg)
+        else:
+            defs["moe"] = moe_defs(cfg)
+    return defs
+
+
+def _stack_defs(defs: PyTree, repeats: int) -> PyTree:
+    return jax.tree.map(
+        lambda d: L.ParamDef((repeats, *d.shape), (None, *d.spec),
+                             scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=lambda x: isinstance(x, L.ParamDef),
+    )
+
+
+def model_defs(cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {}
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        # K codebook embedding tables, summed at input (MusicGen)
+        k = cfg.frontend.num_positions
+        defs["embed"] = L.ParamDef((k, cfg.vocab_size, d), (None, "tp", "fsdp"),
+                                   fan_in=d)
+        defs["head"] = L.ParamDef((k, d, cfg.vocab_size), (None, "fsdp", "tp"),
+                                  fan_in=d)
+    else:
+        defs["embed"] = L.ParamDef((cfg.vocab_size, d), ("tp", "fsdp"),
+                                   fan_in=d)
+        if not cfg.tie_embeddings:
+            defs["head"] = L.ParamDef((d, cfg.vocab_size), ("fsdp", "tp"))
+    if cfg.frontend is not None and cfg.frontend.modality == "vision":
+        df = cfg.frontend.d_frontend
+        defs["projector"] = {
+            "w1": L.ParamDef((df, d), ("fsdp", "tp")),
+            "norm": L.rmsnorm_defs(df),
+            "w2": L.ParamDef((d, d), ("tp", "fsdp")),
+        }
+    block = {
+        f"sub_{i}": _sublayer_defs(cfg, s) for i, s in enumerate(cfg.pattern)
+    }
+    defs["blocks"] = _stack_defs(block, cfg.repeats)
+    defs["final_norm"] = L.rmsnorm_defs(d)
+    return defs
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    return L.init_tree(key, model_defs(cfg))
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return L.abstract_tree(model_defs(cfg))
+
+
+def param_shardings(cfg: ModelConfig, rules: ShardingRules) -> PyTree:
+    return tree_shardings(rules, model_defs(cfg))
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _gather_block_params(p_block, cfg: ModelConfig, rules):
+    """ZeRO-3 gather-at-use: re-constrain each block weight to its spec with
+    the `fsdp` dim replicated. Without this, GSPMD resolves a d-sharded
+    contraction by ALL-REDUCING the (much larger) activations over the data
+    axis — measured 134 MB f32 per matmul per layer on yi-6b before the fix
+    (EXPERIMENTS.md §Perf iteration 1). The constraint makes XLA all-gather
+    the bf16 weights instead; gradients reduce-scatter back automatically
+    when accumulated into the fsdp-sharded grad buffers."""
+    if (rules is None or rules.mesh is None or not rules.fsdp
+            or not rules.zero3_gather):
+        return p_block
+    block_defs = {
+        f"sub_{i}": _sublayer_defs(cfg, s) for i, s in enumerate(cfg.pattern)
+    }
+
+    def gather(w, d):
+        spec = tuple(None if s == "fsdp" else s for s in d.spec)
+        return rules.constrain(w, *spec)
+
+    out = {}
+    for sub_key, sub_defs in block_defs.items():
+        sub_p = p_block[sub_key]
+        new_sub = {}
+        for name, d_sub in sub_defs.items():
+            if name == "moe" and not rules.gather_moe_experts:
+                # Expert parallelism: the routed expert weights stay sharded
+                # on the model axis; only the router (+ shared expert, which
+                # every token uses) is gathered.
+                new_sub[name] = dict(sub_p[name])
+                for small in ("router", "shared"):
+                    if small in sub_p[name]:
+                        new_sub[name][small] = jax.tree.map(
+                            gather, sub_p[name][small], d_sub[small],
+                            is_leaf=lambda x: isinstance(x, L.ParamDef),
+                        )
+            else:
+                new_sub[name] = jax.tree.map(
+                    gather, sub_p[name], d_sub,
+                    is_leaf=lambda x: isinstance(x, L.ParamDef),
+                )
+        out[sub_key] = new_sub
+    return out
+
+
+def _gather_head_params(params, cfg: ModelConfig, rules):
+    """Same gather-at-use for embed/head: a d-sharded head contraction would
+    otherwise all-reduce the full logits tensor over the data axis."""
+    if (rules is None or rules.mesh is None or not rules.fsdp
+            or not rules.zero3_gather):
+        return params
+    defs = model_defs(cfg)
+    out = dict(params)
+    for key in ("embed", "head", "projector"):
+        if key in params:
+            def gather(w, d):
+                spec = tuple(None if s == "fsdp" else s for s in d.spec)
+                return rules.constrain(w, *spec)
+            out[key] = jax.tree.map(
+                gather, params[key], defs[key],
+                is_leaf=lambda x: isinstance(x, L.ParamDef),
+            )
+    return out
+
+
+def _apply_sublayer(p, cfg: ModelConfig, sub: SubLayer, x: Array,
+                    positions: Array, rules) -> Tuple[Array, Array]:
+    h = L.rmsnorm(p["norm_mix"], x, cfg.rms_eps)
+    if sub.kind == "attn":
+        x = x + L.attention(p["attn"], cfg, h, positions, rules)
+    else:
+        out, _ = ssm_block(p["ssm"], cfg, h, rules)
+        x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if sub.ffn != "none":
+        h = L.rmsnorm(p["norm_ffn"], x, cfg.rms_eps)
+        if sub.ffn == "mlp":
+            x = x + L.mlp(p["mlp"], cfg, h, rules)
+        else:
+            out, aux = moe(p["moe"], cfg, h, rules)
+            x = x + out
+    return x, aux
+
+
+def _block(p_block, cfg: ModelConfig, x: Array, positions: Array,
+           rules) -> Tuple[Array, Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, sub in enumerate(cfg.pattern):
+        x, aux = _apply_sublayer(p_block[f"sub_{i}"], cfg, sub, x,
+                                 positions, rules)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def _run_blocks(params, cfg: ModelConfig, x: Array, positions: Array,
+                rules, remat: bool) -> Tuple[Array, Array]:
+    def block(p, h):
+        p = _gather_block_params(p, cfg, rules)
+        return _block(p, cfg, h, positions, rules)
+
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    def scan_fn(carry, p_block):
+        h, aux = carry
+        h, a = block(p_block, h)
+        return (h, aux + a), None
+
+    (x, aux), _ = lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (incl. modality stubs)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, Array],
+                 rules) -> Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        # tokens: (B, K, S) over K codebooks -> summed embeddings
+        tok = batch["tokens"]
+        emb = params["embed"]
+        x = sum(
+            jnp.take(emb[i], tok[:, i], axis=0)
+            for i in range(cfg.frontend.num_positions)
+        ).astype(dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    if (cfg.frontend is not None and cfg.frontend.modality == "vision"
+            and "patch_embeds" in batch):  # prefill/train only; decode is text
+        pe = batch["patch_embeds"].astype(dtype)         # (B, S_img, d_front)
+        pr = params["projector"]
+        h = L.rmsnorm(pr["norm"], pe, cfg.rms_eps)
+        h = jax.nn.gelu(h @ pr["w1"].astype(dtype)) @ pr["w2"].astype(dtype)
+        x = jnp.concatenate([h, x], axis=1)              # image tokens first
+    if rules is not None:
+        x = rules.constrain(x, "dp", "sp", None)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        return jnp.einsum("bsd,kdv->bskv", x, params["head"].astype(x.dtype))
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return x @ head.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Training forward (loss)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array],
+            rules: Optional[ShardingRules] = None,
+            remat: bool = True) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross entropy. batch: tokens (B,S) [or (B,K,S) audio],
+    labels (same shape), optional patch_embeds. Image positions (VLM) are
+    excluded from the loss."""
+    params = _gather_head_params(params, cfg, rules)
+    x = embed_inputs(params, cfg, batch, rules)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = _run_blocks(params, cfg, x, positions, rules, remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = _logits(params, cfg, x).astype(jnp.float32)
+
+    labels = batch["labels"]
+    if cfg.frontend is not None and cfg.frontend.modality == "vision":
+        n_img = s - labels.shape[-1]
+        logits = logits[:, n_img:]
+    if cfg.frontend is not None and cfg.frontend.modality == "audio":
+        labels = jnp.moveaxis(labels, 1, 2)              # (B, S, K)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Stacked (repeats, ...) caches per sub-layer; entries may be None."""
+    attn_k: Dict
+    attn_v: Dict
+    ssm: Dict
+
+
+def cache_alloc_len(cfg: ModelConfig, s_max: int) -> int:
+    """SWA archs keep a ring buffer of the window size (see attention_decode)."""
+    if cfg.sliding_window is not None:
+        return min(s_max, cfg.sliding_window)
+    return s_max
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int,
+                rules: Optional[ShardingRules] = None,
+                shard_seq: bool = False):
+    """Abstract cache (ShapeDtypeStructs) + shardings for decode.
+
+    shard_seq: shard the KV sequence dim over the data axis — the long_500k
+    layout (batch=1 cannot use data parallelism; the cache is what must be
+    distributed instead: sequence parallelism over the KV cache)."""
+    hd = cfg.resolved_head_dim
+    r = cfg.repeats
+    s_alloc = cache_alloc_len(cfg, s_max)
+    attn_k, attn_v, ssm_c = {}, {}, {}
+    for i, sub in enumerate(cfg.pattern):
+        key = f"sub_{i}"
+        if sub.kind == "attn":
+            shape = (r, batch, s_alloc, cfg.num_kv_heads, hd)
+            cdt = jnp.dtype(cfg.dtype)
+            attn_k[key] = jax.ShapeDtypeStruct(shape, cdt)
+            attn_v[key] = jax.ShapeDtypeStruct(shape, cdt)
+        else:
+            c = ssm_cache_defs(cfg, batch)
+            ssm_c[key] = SSMCache(
+                conv=jax.ShapeDtypeStruct((r, *c.conv.shape), c.conv.dtype),
+                state=jax.ShapeDtypeStruct((r, *c.state.shape), c.state.dtype),
+            )
+    cache = DecodeCache(attn_k, attn_v, ssm_c)
+    if rules is None:
+        return cache
+    seq_ax = "dp" if shard_seq else None
+    shardings = DecodeCache(
+        jax.tree.map(lambda x: rules.sharding_for_shape(
+            x.shape, None, "dp", seq_ax, "tp", None), attn_k),
+        jax.tree.map(lambda x: rules.sharding_for_shape(
+            x.shape, None, "dp", seq_ax, "tp", None), attn_v),
+        jax.tree.map(
+            lambda x: (
+                rules.sharding_for_shape(x.shape, None, "dp", None, "tp")
+                if len(x.shape) == 4                       # conv (r,B,w,C)
+                else rules.sharding_for_shape(
+                    x.shape, None, "dp", "tp", None, None)  # state
+            ),
+            ssm_c,
+        ),
+    )
+    return cache, shardings
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> DecodeCache:
+    abs_cache = cache_specs(cfg, batch, s_max)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+
+
+def decode_step(params, cfg: ModelConfig, cache: DecodeCache,
+                tokens: Array, cur_len: Array,
+                rules: Optional[ShardingRules] = None):
+    """One decode step. tokens: (B, 1) [or (B, K, 1) audio].
+
+    Returns (logits, new_cache)."""
+    params = _gather_head_params(params, cfg, rules)
+    batch = {"tokens": tokens}
+    x = embed_inputs(params, cfg, batch, rules)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_len, dtype=jnp.int32)
+
+    def scan_fn(carry, xs):
+        h = carry
+        p_block, ck, cv, cs = xs
+        p_block = _gather_block_params(p_block, cfg, rules)
+        if rules is not None and rules.decode_feature_shard:
+            h = rules.constrain(h, "dp", None, "fsdp")
+        for i, sub in enumerate(cfg.pattern):
+            key = f"sub_{i}"
+            p = p_block[key]
+            hn = L.rmsnorm(p["norm_mix"], h, cfg.rms_eps)
+            if sub.kind == "attn":
+                out, ck[key], cv[key] = L.attention_decode(
+                    p["attn"], cfg, hn, ck[key], cv[key], cur_len, rules
+                )
+                h = h + out
+            else:
+                out, cs[key] = ssm_block(p["ssm"], cfg, hn, rules,
+                                         cache=cs[key])
+                h = h + out
+            if sub.ffn != "none":
+                hn = L.rmsnorm(p["norm_ffn"], h, cfg.rms_eps)
+                if sub.ffn == "mlp":
+                    h = h + L.mlp(p["mlp"], cfg, hn, rules)
+                else:
+                    out, _ = moe(p["moe"], cfg, hn, rules)
+                    h = h + out
+        return h, (ck, cv, cs)
+
+    xs = (params["blocks"], cache.attn_k, cache.attn_v, cache.ssm)
+    x, caches = lax.scan(scan_fn, x, xs)
+    new_cache = DecodeCache(*caches)
+    x = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],
+            rules: Optional[ShardingRules] = None):
+    """Process a full prompt; returns (last-position logits, cache).
+
+    The cache covers the prompt span (decode then extends its own cache);
+    the prefill_32k dry-run cell lowers exactly this function.
+    """
+    params = _gather_head_params(params, cfg, rules)
+    x = embed_inputs(params, cfg, batch, rules)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def scan_fn(h, p_block):
+        p_block = _gather_block_params(p_block, cfg, rules)
+        ck, cv, cs = {}, {}, {}
+        for i, sub in enumerate(cfg.pattern):
+            key = f"sub_{i}"
+            p = p_block[key]
+            hn = L.rmsnorm(p["norm_mix"], h, cfg.rms_eps)
+            if sub.kind == "attn":
+                out, k, v = L.attention_with_kv(p["attn"], cfg, hn,
+                                                positions, rules)
+                ck[key] = k.astype(jnp.dtype(cfg.dtype))
+                cv[key] = v.astype(jnp.dtype(cfg.dtype))
+                h = h + out
+            else:
+                out, cs[key] = ssm_block(p["ssm"], cfg, hn, rules,
+                                         return_cache=True)
+                h = h + out
+            if sub.ffn != "none":
+                hn = L.rmsnorm(p["norm_ffn"], h, cfg.rms_eps)
+                if sub.ffn == "mlp":
+                    h = h + L.mlp(p["mlp"], cfg, hn, rules)
+                else:
+                    out, _ = moe(p["moe"], cfg, hn, rules)
+                    h = h + out
+        return h, (ck, cv, cs)
+
+    x, caches = lax.scan(scan_fn, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.rms_eps)
+    logits = _logits(params, cfg, x)
+    return logits[:, -1], DecodeCache(*caches)

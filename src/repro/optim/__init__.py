@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, OptState
+from .schedule import cosine_schedule

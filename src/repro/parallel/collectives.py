@@ -1,0 +1,55 @@
+"""Topology-aware collective helpers.
+
+`hierarchical_psum`: two-phase reduction for multi-pod meshes — reduce-scatter
+inside the pod (fast ICI), all-reduce of the scattered shards across pods
+(slow DCN, 1/N of the bytes), then all-gather inside the pod. This moves
+`(pods-1)/pods` of the cross-pod traffic off DCN compared to a flat psum over
+("pod", "data") and is the standard DCN-aware schedule for 1000+ node jobs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax import lax
+
+from .mesh import AXIS_DATA, AXIS_POD
+
+Array = jax.Array
+
+
+def hierarchical_psum(x: Array, *, pod_axis: str = AXIS_POD,
+                      inner_axis: str = AXIS_DATA,
+                      scatter_dim: int = 0,
+                      have_pod: bool = True) -> Array:
+    """psum over (pod, inner) with pod traffic reduced by 1/|inner|."""
+    if not have_pod:
+        return lax.psum(x, inner_axis)
+    # Phase 1: reduce-scatter along the fast intra-pod axis.
+    shard = lax.psum_scatter(x, inner_axis, scatter_dimension=scatter_dim,
+                             tiled=True)
+    # Phase 2: all-reduce only the shard across pods (DCN).
+    shard = lax.psum(shard, pod_axis)
+    # Phase 3: all-gather back along the fast axis.
+    return lax.all_gather(shard, inner_axis, axis=scatter_dim, tiled=True)
+
+
+def hierarchical_psum_scatter(x: Array, *, pod_axis: str = AXIS_POD,
+                              inner_axis: str = AXIS_DATA,
+                              scatter_dim: int = 0,
+                              have_pod: bool = True) -> Array:
+    """reduce-scatter over (pod, inner), pod phase on the scattered shard."""
+    shard = lax.psum_scatter(x, inner_axis, scatter_dimension=scatter_dim,
+                             tiled=True)
+    if have_pod:
+        shard = lax.psum(shard, pod_axis)
+    return shard
+
+
+def psum_tree(tree, axes: Sequence[str]):
+    """Sum-reduce a pytree over the given mesh axes (grads, metrics)."""
+    def _psum(g):
+        for a in axes:
+            g = lax.psum(g, a)
+        return g
+    return jax.tree.map(_psum, tree)

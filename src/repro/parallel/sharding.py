@@ -1,0 +1,155 @@
+"""Sharding rules for the LM substrate (pjit/GSPMD style).
+
+Logical dim names are mapped to mesh axes:
+
+  fsdp -> ("pod", "data")   parameter sharding (ZeRO-3 style; XLA inserts
+                            the all-gather at use / reduce-scatter at grad)
+  tp   -> "model"           tensor parallel (heads / d_ff / vocab / experts)
+  dp   -> ("pod", "data")   batch dim of activations
+  sp   -> "model"           sequence dim for long-context activations
+                            (sequence parallelism on the norm/residual path)
+
+GSPMD tolerates non-divisible shardings (it pads), so archs whose head count
+doesn't divide the model axis (qwen2's 12 q-heads on model=16) still compile;
+the roofline accounting uses the padded tile sizes XLA reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple  # noqa: F401
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+
+LOGICAL = {
+    "fsdp": (AXIS_POD, AXIS_DATA),
+    "dp": (AXIS_POD, AXIS_DATA),
+    "tp": (AXIS_MODEL,),
+    "sp": (AXIS_MODEL,),
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolves logical dim names against a concrete mesh (or none)."""
+
+    mesh: Optional[Mesh] = None
+    # Disable FSDP for small models where replication is cheaper.
+    fsdp: bool = True
+    # Shard long sequences over the model axis on the residual path.
+    sequence_parallel: bool = False
+    # Axes backing "fsdp"/"dp". The optimized small/mid-dense-model strategy
+    # folds the model axis in as extra data parallelism (EXPERIMENTS.md
+    # §Perf): fsdp_axes=("pod", "data", "model").
+    fsdp_axes: Tuple[str, ...] = (AXIS_POD, AXIS_DATA)
+    # ZeRO-3 gather-at-use. True is right for training (activations >>
+    # weights); False is right for tiny-batch decode, where GSPMD's
+    # partial-sum all-reduce of the (KB-sized) activations beats streaming
+    # the gathered weights (EXPERIMENTS.md §Perf cell B).
+    zero3_gather: bool = True
+    # Gather MoE expert weights at use. False = expert parallelism: experts
+    # stay sharded over the model axis and tokens move (all-to-all) instead
+    # of the (much larger) expert weights (EXPERIMENTS.md §Perf cell A).
+    gather_moe_experts: bool = False
+    # Shard the decode residual stream's FEATURE dim over the data axes, so
+    # d-sharded weight contractions resolve as tiny activation partial-sums
+    # instead of 50MB weight gathers (EXPERIMENTS.md §Perf cell B iter 2).
+    decode_feature_shard: bool = False
+
+    def axes(self, logical: Optional[str]):
+        if logical == "fsdp" and not self.fsdp:
+            return None
+        if logical == "sp" and not self.sequence_parallel:
+            return None
+        if self.mesh is None:
+            return None
+        if logical in ("fsdp", "dp"):
+            pool = self.fsdp_axes
+        else:
+            pool = LOGICAL[logical]
+        axes = tuple(a for a in pool if a in self.mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, *logical) -> P:
+        return P(*(self.axes(l) for l in logical))
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def _axis_size(self, axes) -> int:
+        if axes is None or axes == ():
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec_for_shape(self, shape, *logical) -> P:
+        """Shape-aware spec: jit in_shardings demand divisibility, so a
+        logical axis that doesn't divide its dim is DROPPED (replicated) —
+        e.g. qwen2's 12 q-heads on model=16 leave attention un-TP'd while
+        d_ff/vocab still shard. Moving the axis to another dim is never done:
+        landing on a contraction dim turns every matmul into a partial-sum
+        all-reduce (measured: 1.6 GB score all-reduces per layer,
+        EXPERIMENTS.md §Perf iteration 0)."""
+        if self.mesh is None:
+            return P(*(None,) * len(shape))
+        entries = [self.axes(l) for l in logical]
+        out = [None] * len(shape)
+        used = set()
+        for i, ax in enumerate(entries):
+            if ax is None:
+                continue
+            cand = (ax,) if isinstance(ax, str) else tuple(ax)
+            # never reuse a mesh axis across dims (fsdp_axes may overlap tp)
+            cand = tuple(a for a in cand if a not in used)
+            # progressively drop trailing axes until the dim divides
+            while cand and shape[i] % self._axis_size(cand) != 0:
+                cand = cand[:-1]
+            if not cand:
+                continue
+            out[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+        return P(*out)
+
+    def sharding_for_shape(self, shape, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for_shape(shape, *logical))
+
+    def constrain(self, x, *logical):
+        """Activation sharding constraint; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec_for_shape(x.shape, *logical))
+        )
+
+    def constrain_p(self, x, spec: P):
+        """Explicit-PartitionSpec constraint (MoE all-to-all reshard)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def tp_size(self) -> int:
+        ax = self.axes("tp") if self.mesh is not None else None
+        return self._axis_size(ax) if ax is not None else 1
+
+
+def tree_shardings(rules: ShardingRules, def_tree):
+    """Map a pytree of ParamDef-like (shape, spec) to NamedShardings."""
+    def leaf(d):
+        return rules.sharding_for_shape(d.shape, *d.spec)
+    return jax.tree.map(
+        leaf, def_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "spec"),
+    )

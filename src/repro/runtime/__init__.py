@@ -1,0 +1,4 @@
+from .fault_tolerance import (
+    ResumableReconstruction, StragglerMonitor, restart_loop,
+)
+from .elastic import ElasticPlan, plan_remesh, build_mesh

@@ -1,0 +1,55 @@
+"""Elastic scaling: resume a job on a different mesh (DESIGN.md §7).
+
+The checkpoint manifest stores logical PartitionSpecs, not device ids, so a
+restore onto any mesh with the same axis *names* re-shards automatically
+(checkpoint/io.load_checkpoint). This module adds the policy layer: given the
+devices that survived, build the largest well-formed mesh and re-derive the
+dependent run parameters (per-rank batch, iFDK grid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    dropped_devices: int
+
+
+def plan_remesh(devices: Sequence, model_parallel: int,
+                want_pods: Optional[int] = None) -> ElasticPlan:
+    """Largest (pod?, data, model) mesh from surviving devices.
+
+    model_parallel is fixed by memory footprint (e.g. iFDK's R, or TP size);
+    the data axis absorbs the loss. E.g. 512 devices with model=16 -> data=32;
+    after losing a node of 4, 508 devices -> data=31 (496 used, 12 idle).
+    """
+    n = len(devices)
+    if model_parallel > n:
+        raise ValueError("not enough devices for the model-parallel degree")
+    data = n // model_parallel
+    if want_pods and want_pods > 1:
+        # keep pods balanced: shrink data until divisible
+        while data % want_pods and data > 1:
+            data -= 1
+        shape = (want_pods, data // want_pods, model_parallel)
+        names = (AXIS_POD, AXIS_DATA, AXIS_MODEL)
+    else:
+        shape = (data, model_parallel)
+        names = (AXIS_DATA, AXIS_MODEL)
+    used = int(np.prod(shape))
+    return ElasticPlan(shape, names, n - used)
+
+
+def build_mesh(devices: Sequence, plan: ElasticPlan) -> Mesh:
+    used = int(np.prod(plan.mesh_shape))
+    devs = np.asarray(devices[:used]).reshape(plan.mesh_shape)
+    return Mesh(devs, plan.axis_names)

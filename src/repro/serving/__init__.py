@@ -1,0 +1,1 @@
+from .engine import make_prefill, make_decode_step, greedy_generate

@@ -1,0 +1,61 @@
+"""Serving: batched prefill + single-token decode over a sharded KV cache.
+
+decode_* dry-run shapes lower `decode_step` (one new token against a
+seq_len-deep cache); prefill_* shapes lower `prefill`. SSM/hybrid archs carry
+O(1) recurrent state instead of a growing KV cache (the long_500k story).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.parallel.sharding import ShardingRules
+
+PyTree = Any
+
+
+def make_prefill(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    def prefill_fn(params, batch: Dict[str, jax.Array]):
+        return T.prefill(params, cfg, batch, rules)
+    return prefill_fn
+
+
+def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    def decode_fn(params, cache, tokens, cur_len):
+        return T.decode_step(params, cfg, cache, tokens, cur_len, rules)
+    return decode_fn
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: Dict[str, jax.Array],
+                    steps: int, s_max: int,
+                    rules: Optional[ShardingRules] = None):
+    """Prefill the prompt then greedily decode `steps` tokens (examples)."""
+    tokens = prompt["tokens"]
+    audio = cfg.frontend is not None and cfg.frontend.modality == "audio"
+    b = tokens.shape[0]
+    s0 = tokens.shape[-1]
+    logits, cache = T.prefill(params, cfg, prompt, rules)
+
+    # Re-home the prefill cache into a larger decode cache.
+    full = T.init_cache(cfg, b, s_max)
+    def place(big, small):
+        if small.ndim >= 3 and small.shape[2] == s0 and big.shape[2] == s_max:
+            return jax.lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype), 0, axis=2)
+        return small.astype(big.dtype)
+    cache = jax.tree.map(place, full, cache)
+
+    out = []
+    cur = jnp.argmax(logits, -1)  # (B,) or (B,K)
+    for t in range(steps):
+        out.append(cur)
+        tok = cur[..., None].astype(jnp.int32)
+        logits, cache = T.decode_step(params, cfg, cache, tok,
+                                      jnp.int32(s0 + t), rules)
+        cur = jnp.argmax(logits, -1)
+    out.append(cur)
+    axis = -1 if not audio else -1
+    return jnp.stack(out, axis=axis)

@@ -1,0 +1,1 @@
+from .train_step import TrainState, make_train_step, init_train_state, make_abstract_state

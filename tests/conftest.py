@@ -1,0 +1,15 @@
+import os
+
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real (1-device) CPU.
+# Distributed tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,59 @@
+"""Flash-attention Pallas kernel vs oracle: shape/dtype/causality sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import attention_ref, flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, s, h, kh, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (2, 128, 4, 2, 32),     # GQA
+    (1, 256, 8, 8, 64),     # MHA
+    (2, 128, 4, 1, 32),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref_f32(b, s, h, kh, d, causal):
+    q, k, v = _qkv(b, s, h, kh, d, jnp.float32)
+    want = attention_ref(q, k, v, causal)
+    got = flash_attention(q, k, v, causal, bq=64, bk=64)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_tolerance():
+    q, k, v = _qkv(2, 128, 4, 2, 32, jnp.bfloat16)
+    want = attention_ref(q, k, v, True).astype(jnp.float32)
+    got = flash_attention(q, k, v, True, bq=64, bk=64).astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(got - want))) < 0.02
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_block_shape_sweep(bq, bk):
+    q, k, v = _qkv(1, 128, 2, 2, 32, jnp.float32)
+    want = attention_ref(q, k, v, True)
+    got = flash_attention(q, k, v, True, bq=bq, bk=bk)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causality_property():
+    """Perturbing future keys must not change earlier outputs."""
+    q, k, v = _qkv(1, 128, 2, 2, 32, jnp.float32)
+    out1 = flash_attention(q, k, v, True, bq=64, bk=64)
+    k2 = k.at[:, 100:].set(0.0)
+    v2 = v.at[:, 100:].set(0.0)
+    out2 = flash_attention(q, k2, v2, True, bq=64, bk=64)
+    np.testing.assert_allclose(np.array(out1[:, :100]),
+                               np.array(out2[:, :100]), atol=1e-6)
+    assert float(jnp.max(jnp.abs(out1[:, 100:] - out2[:, 100:]))) > 1e-4

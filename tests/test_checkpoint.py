@@ -1,0 +1,128 @@
+"""Checkpoint I/O + fault tolerance + elastic remesh."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager, latest_step, load_checkpoint, save_checkpoint,
+)
+from repro.runtime import (
+    ResumableReconstruction, StragglerMonitor, plan_remesh, restart_loop,
+)
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12.0).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.float32),
+                   "step": np.int64(7)},
+    }
+
+
+class TestCheckpointIO:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        save_checkpoint(str(tmp_path), 3, t)
+        assert latest_step(str(tmp_path)) == 3
+        out = load_checkpoint(str(tmp_path), 3, t)
+        np.testing.assert_array_equal(np.array(out["w"]), np.array(t["w"]))
+        np.testing.assert_array_equal(np.array(out["nested"]["b"]),
+                                      np.array(t["nested"]["b"]))
+
+    def test_commit_marker_required(self, tmp_path):
+        import os
+        t = _tree()
+        p = save_checkpoint(str(tmp_path), 1, t)
+        os.remove(os.path.join(p, ".COMMITTED"))
+        assert latest_step(str(tmp_path)) is None  # uncommitted is invisible
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        t = _tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        bad = dict(t)
+        bad["w"] = jnp.zeros((2, 2))
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), 1, bad)
+
+    def test_manager_retention_and_async(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _tree(), blocking=False)
+        mgr.wait()
+        mgr._gc()
+        steps = sorted(
+            int(n.split("_")[1]) for n in
+            __import__("os").listdir(str(tmp_path)) if n.startswith("step_")
+        )
+        assert steps == [3, 4]
+        s, tree = mgr.restore_latest(_tree())
+        assert s == 4 and tree is not None
+
+
+class TestFaultTolerance:
+    def test_resumable_reconstruction_survives_fault(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        step_fn = lambda acc, b: acc + (b + 1.0)  # noqa: E731
+        r1 = ResumableReconstruction(step_fn, jnp.zeros((3,)), 8, mgr,
+                                     checkpoint_every=2)
+        with pytest.raises(RuntimeError):
+            r1.run(fail_at=5)
+        r2 = ResumableReconstruction(step_fn, jnp.zeros((3,)), 8, mgr,
+                                     checkpoint_every=2)
+        r2.resume()
+        assert r2.state.cursor == 4  # resumed from the last committed batch
+        out = r2.run()
+        np.testing.assert_allclose(np.array(out), float(sum(range(1, 9))))
+
+    def test_restart_loop_exact_result_after_failures(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = restart_loop(
+            lambda: {"x": np.float64(0.0)},
+            lambda s, i: {"x": s["x"] + i},
+            n_steps=20, manager=mgr, checkpoint_every=5, fail_at={7, 13},
+        )
+        assert state["x"] == float(sum(range(20)))
+
+    def test_restart_loop_gives_up_after_max_failures(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(RuntimeError):
+            restart_loop(
+                lambda: {"x": np.float64(0.0)},
+                lambda s, i: (_ for _ in ()).throw(RuntimeError("boom")),
+                n_steps=5, manager=mgr, max_failures=2,
+            )
+
+    def test_straggler_monitor(self):
+        mon = StragglerMonitor(threshold=2.0)
+        flags = [mon.record(t) for t in [1.0, 1.1, 0.9, 5.0, 1.0]]
+        assert flags == [False, False, False, True, False]
+        hint = mon.rebalance_hint(n_batches=4, n_ranks=8)
+        assert hint["micro_batches"] >= 8
+        assert hint["flagged_steps"][0][0] == 3
+
+    def test_straggler_does_not_pollute_ema(self):
+        mon = StragglerMonitor(threshold=2.0)
+        for t in [1.0, 1.0, 10.0, 1.0, 1.0]:
+            mon.record(t)
+        assert mon.ema < 1.5
+
+
+class TestElastic:
+    def test_plan_remesh_full(self):
+        plan = plan_remesh(list(range(512)), model_parallel=16, want_pods=2)
+        assert plan.mesh_shape == (2, 16, 16)
+        assert plan.dropped_devices == 0
+
+    def test_plan_remesh_after_node_loss(self):
+        plan = plan_remesh(list(range(508)), model_parallel=16, want_pods=2)
+        assert plan.mesh_shape == (2, 15, 16)
+        assert plan.dropped_devices == 508 - 2 * 15 * 16
+
+    def test_plan_remesh_single_pod(self):
+        plan = plan_remesh(list(range(100)), model_parallel=8)
+        assert plan.mesh_shape == (12, 8)
+
+    def test_insufficient_devices(self):
+        with pytest.raises(ValueError):
+            plan_remesh(list(range(4)), model_parallel=16)

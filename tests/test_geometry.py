@@ -1,0 +1,103 @@
+"""Geometry: projection matrices, and the paper's Theorems 1-3."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.geometry import (
+    CBCTGeometry, assert_factorizable, default_geometry, projection_matrices,
+    project_voxels, source_position,
+)
+
+
+def _geom(n=16, n_proj=8, **kw):
+    g = default_geometry(n, n_proj=n_proj)
+    return g
+
+
+class TestProjectionMatrix:
+    def test_shapes(self):
+        g = _geom()
+        pm = projection_matrices(g)
+        assert pm.shape == (g.n_proj, 3, 4)
+        assert pm.dtype == np.float32
+
+    def test_structural_zeros_theorems_2_3(self):
+        """P[0,2] == P[2,2] == 0 exactly (not approximately)."""
+        g = _geom(n_proj=32)
+        pm = projection_matrices(g)
+        assert np.all(pm[:, 0, 2] == 0.0)
+        assert np.all(pm[:, 2, 2] == 0.0)
+        assert_factorizable(pm)
+
+    def test_assert_factorizable_rejects_general_matrix(self):
+        bad = np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32)
+        with pytest.raises(ValueError):
+            assert_factorizable(bad)
+
+    def test_volume_center_projects_to_detector_center(self):
+        g = _geom(n=17, n_proj=12)  # odd n so the center voxel is exact
+        pm = projection_matrices(g)
+        for s in range(g.n_proj):
+            u, v, w = project_voxels(jnp.asarray(pm[s]), g.n_x, g.n_y, g.n_z)
+            c = (g.n_x - 1) // 2
+            assert abs(float(u[c, c, c]) - (g.n_u - 1) / 2) < 1e-3
+            assert abs(float(v[c, c, c]) - (g.n_v - 1) / 2) < 1e-3
+
+    def test_theorem_1_z_symmetry(self):
+        g = _geom(n_proj=8)
+        pm = projection_matrices(g)
+        u, v, w = project_voxels(jnp.asarray(pm[3]), g.n_x, g.n_y, g.n_z)
+        # mirrored voxels: same u, v + v~ == N_v - 1
+        assert float(jnp.max(jnp.abs(u - u[..., ::-1]))) < 1e-4
+        assert float(jnp.max(jnp.abs(v + v[..., ::-1] - (g.n_v - 1)))) < 1e-3
+
+    def test_v_affine_in_k(self):
+        g = _geom(n_proj=8)
+        pm = projection_matrices(g)
+        u, v, w = project_voxels(jnp.asarray(pm[1]), g.n_x, g.n_y, g.n_z)
+        dv = v[..., 1:] - v[..., :-1]
+        assert float(jnp.max(jnp.abs(dv - dv[..., :1]))) < 1e-3
+
+    def test_w_constant_in_k(self):
+        g = _geom(n_proj=8)
+        pm = projection_matrices(g)
+        _, _, w = project_voxels(jnp.asarray(pm[5]), g.n_x, g.n_y, g.n_z)
+        assert float(jnp.max(jnp.abs(w - w[..., :1]))) == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        beta_idx=st.integers(0, 31),
+        d=st.floats(3.0, 8.0),
+        mag=st.floats(1.2, 3.0),
+    )
+    def test_theorems_hold_for_random_geometry(self, beta_idx, d, mag):
+        g = CBCTGeometry(
+            n_proj=32, n_u=24, n_v=24, d_u=0.2, d_v=0.25,
+            d=d, dsd=d * mag, n_x=8, n_y=8, n_z=8,
+            d_x=0.1, d_y=0.12, d_z=0.11,
+        )
+        pm = projection_matrices(g)
+        assert_factorizable(pm)
+        u, v, w = project_voxels(jnp.asarray(pm[beta_idx]), 8, 8, 8)
+        assert float(jnp.max(jnp.abs(u - u[..., :1]))) < 1e-4
+        assert float(jnp.max(jnp.abs(w - w[..., :1]))) < 1e-6
+        assert float(jnp.max(jnp.abs(v + v[..., ::-1] - (g.n_v - 1)))) < 1e-3
+
+    def test_source_orbit_radius(self):
+        g = _geom()
+        for beta in [0.0, 1.0, 2.5]:
+            s = source_position(g, beta)
+            assert abs(np.linalg.norm(s) - g.d) < 1e-9
+            assert s[2] == 0.0
+
+    def test_eq3_z_formula(self):
+        """z == d + sin(b)(i-cx)Dx - cos(b)(j-cy)Dy (paper Eq. 3)."""
+        g = _geom()
+        beta = g.angles[3]
+        pm = projection_matrices(g)[3].astype(np.float64)
+        i, j, k = 5.0, 2.0, 7.0
+        z = pm[2] @ np.array([i, j, k, 1.0])
+        want = (g.d + np.sin(beta) * (i - (g.n_x - 1) / 2) * g.d_x
+                - np.cos(beta) * (j - (g.n_y - 1) / 2) * g.d_y)
+        assert abs(z - want) < 1e-5

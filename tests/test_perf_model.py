@@ -1,0 +1,71 @@
+"""iFDK performance model (paper Eqs. 8-19, Table 5, Fig. 5)."""
+import pytest
+
+from repro.core.distributed import IFDKGrid
+from repro.core.geometry import CBCTGeometry
+from repro.core.perf_model import ABCI, TPU_V5E, gups_end_to_end, predict
+
+
+def paper_problem(n_out=4096):
+    return CBCTGeometry(
+        n_proj=4096, n_u=2048, n_v=2048, d_u=0.002, d_v=0.002,
+        d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
+        d_x=0.001, d_y=0.001, d_z=0.001,
+    )
+
+
+class TestPerfModel:
+    def test_compute_shrinks_with_devices(self):
+        """Strong scaling: T_compute inversely proportional to C (paper
+        §4.2.3 conclusion I)."""
+        g = paper_problem()
+        t = [predict(g, IFDKGrid(r=32, c=c), ABCI).t_compute
+             for c in (1, 2, 4, 8)]
+        assert t[0] > t[1] > t[2] > t[3]
+        assert t[0] / t[3] == pytest.approx(8.0, rel=0.35)
+
+    def test_post_time_constant_in_c(self):
+        g = paper_problem()
+        a = predict(g, IFDKGrid(r=32, c=2), ABCI)
+        b = predict(g, IFDKGrid(r=32, c=8), ABCI)
+        assert a.t_post == pytest.approx(b.t_post, rel=1e-6)
+
+    def test_reduce_vanishes_when_c_is_1(self):
+        g = paper_problem()
+        assert predict(g, IFDKGrid(r=32, c=1), ABCI).t_reduce == 0.0
+
+    def test_paper_magnitudes_4k_256gpus(self):
+        """Paper Fig. 5a / §5.3.3: 4K problem, 256 GPUs (R=32, C=8):
+        T_store ~ 9 s, T_D2H ~ 2.6 s, runtime tens of seconds."""
+        g = paper_problem()
+        b = predict(g, IFDKGrid(r=32, c=8), ABCI)
+        assert b.t_store == pytest.approx(9.0, rel=0.1)
+        # paper quotes ~2.6 s; Eq. 14 with their own constants gives ~1.4 s
+        # (their text assumes switch contention) — accept the bracket.
+        assert 1.2 < b.t_d2h < 3.0
+        assert 10.0 < b.t_runtime < 60.0
+
+    def test_paper_table5_compute_breakdown_256(self):
+        """Table 5 row (4096^3, 256 GPUs): T_bp ~ 7.0s, T_compute ~ 10.2s.
+        The model should land within ~50% (it is a peak projection)."""
+        g = paper_problem()
+        b = predict(g, IFDKGrid(r=32, c=8), ABCI)
+        assert b.t_bp == pytest.approx(7.0, rel=0.5)
+        assert b.t_compute == pytest.approx(10.2, rel=0.5)
+
+    def test_delta_overlap_factor_exceeds_one(self):
+        """Table 5: delta > 1 (pipelining wins) for all reported rows."""
+        g = paper_problem()
+        for c in (2, 4, 8):
+            assert predict(g, IFDKGrid(r=32, c=c), ABCI).delta > 1.0
+
+    def test_gups_increases_with_devices(self):
+        g = paper_problem()
+        g1 = gups_end_to_end(g, predict(g, IFDKGrid(r=32, c=2), ABCI))
+        g2 = gups_end_to_end(g, predict(g, IFDKGrid(r=32, c=8), ABCI))
+        assert g2 > g1
+
+    def test_tpu_constants_give_finite_projection(self):
+        g = paper_problem()
+        b = predict(g, IFDKGrid(r=16, c=16), TPU_V5E)
+        assert 0 < b.t_runtime < 120

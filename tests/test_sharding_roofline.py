@@ -1,0 +1,117 @@
+"""ShardingRules shape-aware degradation + roofline HLO parser."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.roofline import (
+    CollectiveStats, Roofline, _line_group_size, _shape_bytes,
+    _split_computations, collective_stats, forward_flops_per_token,
+    analytic_costs, model_flops_for,
+)
+from repro.configs import get_config
+from repro.models.config import count_params, count_active_params
+from repro.parallel.sharding import ShardingRules
+
+
+class TestSpecDegradation:
+    """Pure spec logic (no mesh needed beyond names/sizes)."""
+
+    def test_no_mesh_is_fully_replicated(self):
+        r = ShardingRules(mesh=None)
+        assert r.spec_for_shape((4, 8), "dp", "tp") == P(None, None)
+
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32", "4,4") == 64
+        assert _shape_bytes("bf16", "8") == 16
+        assert _shape_bytes("pred", "2,3") == 6
+        assert _shape_bytes("weird", "4") == 0
+
+    def test_group_size_iota(self):
+        assert _line_group_size("replica_groups=[16,16]<=[256]") == 16
+        assert _line_group_size("replica_groups=[2,4]<=[8]") == 4
+
+    def test_group_size_list(self):
+        assert _line_group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+
+
+HLO = """HloModule test, is_scheduled=true
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(6)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ag = f32[8]{0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+}
+
+ENTRY %main_spmd (a: f32[4]) -> f32[] {
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  ROOT %ar = f32[] all-reduce(%s), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+
+
+class TestHLOParser:
+    def test_split_computations(self):
+        comps, entry = _split_computations(HLO)
+        assert entry == "main_spmd"
+        assert set(comps) == {"cond", "body", "main_spmd"}
+
+    def test_trip_count_multiplies_body_collectives(self):
+        stats = collective_stats(HLO)
+        # body all-gather: 32B result x 6 trips, group 4 -> wire 3/4*32*6
+        assert stats.op_count["all-gather"] == 6.0
+        assert stats.op_bytes["all-gather"] == pytest.approx(32 * 6)
+        # entry all-reduce: 4B, group 8 -> once
+        assert stats.op_count["all-reduce"] == 1.0
+        want = (3 / 4) * 32 * 6 + 2 * (7 / 8) * 4
+        assert stats.wire_bytes == pytest.approx(want)
+
+    def test_ring_factors(self):
+        s = CollectiveStats()
+        s.add("all-gather", 100.0, 4)
+        s.add("all-reduce", 100.0, 4)
+        s.add("reduce-scatter", 100.0, 4)
+        s.add("collective-permute", 100.0, 4)
+        assert s.wire_bytes == pytest.approx(75 + 150 + 75 + 100)
+
+
+class TestRoofline:
+    def test_dominant_term(self):
+        r = Roofline("a", "s", "m", 256, hlo_flops=197e12, hlo_bytes=819e9,
+                     wire_bytes=1e9)
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.t_memory == pytest.approx(1.0)
+        assert r.dominant in ("compute", "memory")
+        r2 = Roofline("a", "s", "m", 256, 1e12, 1e9, wire_bytes=500e9)
+        assert r2.dominant == "collective"
+
+    def test_model_flops_train_6nd(self):
+        cfg = get_config("yi-6b")
+        n = count_active_params(cfg)
+        info = dict(kind="train", seq=4096, batch=256)
+        assert model_flops_for(cfg, info, n) == pytest.approx(
+            6.0 * n * 4096 * 256
+        )
+
+    def test_forward_flops_close_to_2nd(self):
+        """Analytic per-token fwd FLOPs ~ 2*N_active*(1+eps) at short seq."""
+        for arch in ["yi-6b", "deepseek-coder-33b", "mixtral-8x7b"]:
+            cfg = get_config(arch)
+            n = count_active_params(cfg)
+            f = forward_flops_per_token(cfg, s_kv=1.0)
+            assert 1.5 * n < f < 3.5 * n, arch
+
+    def test_analytic_costs_positive_and_scaled(self):
+        cfg = get_config("yi-6b")
+        info = dict(kind="train", seq=4096, batch=256)
+        a256 = analytic_costs(cfg, info, 256, count_params(cfg))
+        a512 = analytic_costs(cfg, info, 512, count_params(cfg))
+        assert a256.flops_per_dev == pytest.approx(2 * a512.flops_per_dev)
+        assert a256.hbm_bytes_per_dev > 0
+
+    def test_useful_ratio(self):
+        r = Roofline("a", "s", "m", 2, hlo_flops=3.0, hlo_bytes=1.0,
+                     wire_bytes=0.0, model_flops=6.0)
+        assert r.useful_ratio == pytest.approx(1.0)
