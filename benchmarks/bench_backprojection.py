@@ -1,13 +1,21 @@
 """Paper Table 4: back-projection kernel throughput (GUPS) across problem
-sizes and implementations.
+sizes and implementations — plus the storage-precision / autotuner report.
 
 On this CPU container the absolute GUPS are CPU numbers; the *relative*
 comparison reproduces the paper's claim: the factorized Alg. 4 ("L1-Tran")
 beats the reference Alg. 2 ("RTK-32") via the 1/6 coordinate-cost reduction
 and the transposed layout. Host-device copies are excluded, as in the paper.
+
+CLI (python benchmarks/bench_backprojection.py):
+  --dtype {fp32,bf16,fp16}   storage dtype of the projection stream; the
+                             report compares it against fp32 and shows the
+                             VMEM-tuned vs naive-default block shapes.
+  --budget BYTES             VMEM budget handed to the autotuner.
+  --iters N                  timing iterations per measurement.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -18,6 +26,8 @@ from repro.core.backprojection import (
 )
 from repro.core.fdk import gups
 from repro.core.geometry import CBCTGeometry
+from repro.core.precision import Precision
+from repro.kernels.backproject import tune
 from repro.kernels.backproject.ops import backproject_pallas
 
 # (n_u=n_v, n_proj, n_out) — scaled-down analogues of Table 4 rows; alpha is
@@ -46,6 +56,22 @@ def _case_geometry(n_det: int, n_proj: int, n_out: int) -> CBCTGeometry:
     )
 
 
+def _naive_block(n: int, target: int = 8) -> int:
+    """The pre-autotuner default: largest divisor of n that is <= target."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _time(fn, iters):
+    jax.block_until_ready(fn())  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
 def run(iters: int = 2):
     import numpy as np
     from repro.core.geometry import projection_matrices
@@ -59,14 +85,86 @@ def run(iters: int = 2):
         for name, fn in IMPLS.items():
             if name.startswith("pallas") and n_out > 32:
                 continue  # interpret mode is python-speed; keep it small
-            out = fn(pm, q, g.n_x, g.n_y, g.n_z)
-            jax.block_until_ready(out)
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                jax.block_until_ready(fn(pm, q, g.n_x, g.n_y, g.n_z))
-            dt = (time.perf_counter() - t0) / iters
+            dt = _time(lambda: fn(pm, q, g.n_x, g.n_y, g.n_z), iters)
             rows.append((
                 f"table4/{n_det}^2x{n_proj}->{n_out}^3/a={alpha:.0f}/{name}",
                 dt * 1e6, f"{gups(g, dt):.3f}GUPS",
             ))
     return rows
+
+
+def run_precision(dtype_name: str = "fp16", iters: int = 2,
+                  budget: int | None = None):
+    """Tuned-vs-default blocks and fp32-vs-low-precision GUPS for the Pallas
+    kernel (the tentpole report: storage dtype halves the qt VMEM term, the
+    autotuner turns that into bigger batches under the same budget)."""
+    import numpy as np
+    from repro.core.geometry import projection_matrices
+    prec = Precision(dtype_name)
+    budget = tune.DEFAULT_VMEM_BUDGET if budget is None else budget
+    rows = []
+    rng = np.random.default_rng(0)
+    for n_det, n_proj, n_out in CASES:
+        if n_out > 32:
+            continue  # interpret mode is python-speed; keep it small
+        g = _case_geometry(n_det, n_proj, n_out)
+        pm = jnp.asarray(projection_matrices(g))
+        q32 = jnp.asarray(rng.normal(size=g.proj_shape()), jnp.float32)
+        q_lp = q32.astype(prec.storage_dtype)
+        case = f"precision/{n_det}^2x{n_proj}->{n_out}^3"
+
+        variants = [("fp32", q32)]
+        if prec.storage != "fp32":
+            variants.append((prec.storage, q_lp))
+        for tag, q in variants:
+            cfg = tune.autotune(g.n_x, g.n_y, g.n_z, g.n_proj, g.n_u, g.n_v,
+                                qt_dtype=q.dtype, budget=budget, measure=True)
+            assert cfg.vmem <= budget, (cfg, budget)
+            dt = _time(
+                lambda: backproject_pallas(
+                    pm, q, g.n_x, g.n_y, g.n_z,
+                    bi=cfg.bi, bj=cfg.bj, bs=cfg.bs,
+                ),
+                iters,
+            )
+            rows.append((
+                f"{case}/{tag}/tuned(bi={cfg.bi},bj={cfg.bj},bs={cfg.bs},"
+                f"vmem={cfg.vmem}B<=budget={budget}B)",
+                dt * 1e6, f"{gups(g, dt):.3f}GUPS",
+            ))
+
+        nb = (_naive_block(g.n_x), _naive_block(g.n_y),
+              _naive_block(g.n_proj))
+        dt = _time(
+            lambda: backproject_pallas(pm, q_lp, g.n_x, g.n_y, g.n_z,
+                                       bi=nb[0], bj=nb[1], bs=nb[2]),
+            iters,
+        )
+        rows.append((
+            f"{case}/{prec.storage}/default(bi={nb[0]},bj={nb[1]},bs={nb[2]})",
+            dt * 1e6, f"{gups(g, dt):.3f}GUPS",
+        ))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dtype", default="fp16",
+                    choices=["fp32", "bf16", "fp16"],
+                    help="storage dtype of the projection stream")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="VMEM budget in bytes (default REPRO_BP_VMEM_BUDGET)")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--table4", action="store_true",
+                    help="also run the full Table-4 impl sweep")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = run_precision(args.dtype, args.iters, args.budget)
+    if args.table4:
+        rows += run(args.iters)
+    for row, us, derived in rows:
+        print(f"{row},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

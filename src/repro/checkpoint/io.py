@@ -32,6 +32,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.compat import (
+    tree_flatten, tree_flatten_with_path, tree_map, tree_unflatten,
+)
+
 PyTree = Any
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
@@ -72,7 +76,7 @@ def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
     tmp = path + ".tmp"
     leaves_dir = os.path.join(tmp, "leaves")
     os.makedirs(leaves_dir, exist_ok=True)
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = tree_flatten_with_path(tree)
     manifest = {"step": step, "leaves": []}
     for idx, (keypath, leaf) in enumerate(flat):
         name = f"leaf_{idx:05d}"
@@ -120,7 +124,7 @@ def load_checkpoint(directory: str, step: int, like: PyTree,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "MANIFEST.json")) as f:
         manifest = json.load(f)
-    flat, treedef = jax.tree.flatten(like)
+    flat, treedef = tree_flatten(like)
     if len(flat) != len(manifest["leaves"]):
         raise ValueError(
             f"checkpoint has {len(manifest['leaves'])} leaves, expected {len(flat)}"
@@ -138,7 +142,7 @@ def load_checkpoint(directory: str, step: int, like: PyTree,
             out.append(jax.device_put(arr, sharding))
         else:
             out.append(jax.device_put(arr))
-    return jax.tree.unflatten(treedef, out)
+    return tree_unflatten(treedef, out)
 
 
 class CheckpointManager:
@@ -152,7 +156,7 @@ class CheckpointManager:
 
     def save(self, step: int, tree: PyTree, blocking: bool = False) -> None:
         # Snapshot to host memory synchronously (cheap), write async.
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        host_tree = tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
         self.wait()
 
         def _write():

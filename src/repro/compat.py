@@ -1,0 +1,58 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern public API (``jax.shard_map`` with
+``check_vma``, ``jax.tree.flatten_with_path``); this module backfills those
+names on older JAX (0.4.x) so every call site imports from here instead of
+probing versions locally:
+
+  * ``shard_map``       — ``jax.shard_map`` when present, otherwise
+                          ``jax.experimental.shard_map.shard_map`` with the
+                          ``check_vma`` keyword mapped to its old name
+                          ``check_rep``.
+  * ``tree_flatten_with_path`` / ``tree_map`` — ``jax.tree.*`` when present,
+                          ``jax.tree_util.*`` otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["shard_map", "tree_flatten", "tree_flatten_with_path",
+           "tree_map", "tree_unflatten"]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:
+            return functools.partial(shard_map, **kwargs)
+        return _legacy_shard_map(f, **kwargs)
+
+
+# jax.tree itself only exists from 0.4.25; getattr keeps the shim importable
+# on anything older, falling back to jax.tree_util throughout.
+_tree = getattr(jax, "tree", None)
+
+if _tree is not None and hasattr(_tree, "flatten_with_path"):
+    tree_flatten_with_path = _tree.flatten_with_path
+else:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+if _tree is not None and hasattr(_tree, "map"):
+    tree_map = _tree.map
+else:
+    tree_map = jax.tree_util.tree_map
+
+if _tree is not None and hasattr(_tree, "flatten"):
+    tree_flatten = _tree.flatten
+    tree_unflatten = _tree.unflatten
+else:
+    tree_flatten = jax.tree_util.tree_flatten
+    tree_unflatten = jax.tree_util.tree_unflatten

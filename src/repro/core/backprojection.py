@@ -41,6 +41,11 @@ def bilinear_gather(img: Array, rows: Array, cols: Array) -> Array:
 
     Out-of-bounds neighbours contribute zero (matches a zero-padded detector;
     the GPU texture unit's border mode in the paper's Bp-L1 variants).
+
+    `img` may be stored in a reduced precision (bf16/fp16 — the precision
+    policy's projection stream); each gathered tap is upcast to f32 before
+    the weighted sum, so interpolation and accumulation are always f32
+    (the paper's fp16-texture-fetch / fp32-blend split).
     """
     nr, nc = img.shape
     r0 = jnp.floor(rows)
@@ -54,7 +59,7 @@ def bilinear_gather(img: Array, rows: Array, cols: Array) -> Array:
         valid = (ri >= 0) & (ri < nr) & (ci >= 0) & (ci < nc)
         ric = jnp.clip(ri, 0, nr - 1)
         cic = jnp.clip(ci, 0, nc - 1)
-        return jnp.where(valid, img[ric, cic] * wgt, 0.0)
+        return jnp.where(valid, img[ric, cic].astype(jnp.float32) * wgt, 0.0)
 
     return (
         tap(r0i, c0i, (1 - dr) * (1 - dc))

@@ -34,11 +34,13 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
 from .backprojection import backproject_factorized
 from .filtering import make_filter
 from .fdk import fdk_scale, _get_backprojector, BpImpl
 from .geometry import CBCTGeometry, projection_matrices
+from .precision import Precision, resolve_precision
 
 Array = jax.Array
 
@@ -108,13 +110,21 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
                          impl: BpImpl = "factorized",
                          window: str = "ramlak",
                          reduce: Literal["psum", "scatter"] = "scatter",
+                         precision: Precision | str | None = "fp32",
                          ) -> Callable[[Array], Array]:
     """Build the jit-able distributed reconstruction: projections -> volume.
 
     Input : (N_p, N_v, N_u) sharded with `input_sharding(mesh)`.
     Output: (N_x, N_y, N_z); x slab-sharded over `model`, and with
             reduce="scatter" additionally y-sharded over `data` (+`pod`).
+
+    `precision` (core/precision.py) sets the storage dtype of the filtered
+    projections: filtering emits it *before* the column AllGather — the
+    paper's dominant communication term — so bf16/fp16 halves the gathered
+    bytes per rank; back-projection upcasts taps and accumulates f32, and
+    the volume Reduce stays f32.
     """
+    prec = resolve_precision(precision)
     r = axis_size(mesh, AXIS_MODEL)
     c = axis_size(mesh, AXIS_POD, AXIS_DATA)
     if g.n_proj % (r * c):
@@ -123,7 +133,7 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
         raise ValueError(f"N_x={g.n_x} must divide into R={r} slabs")
     nx_slab = g.n_x // r
     dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
-    filt = make_filter(g, window)
+    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
     backproject = _get_backprojector(impl)
     pmats_all = jnp.asarray(projection_matrices(g))
     scale = fdk_scale(g)
@@ -154,7 +164,7 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
 
     @jax.jit
     def reconstruct(projections: Array) -> Array:
-        return jax.shard_map(
+        return shard_map(
             rank_fn, mesh=mesh,
             in_specs=(pspec, pspec),
             out_specs=out_sp,

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import backprojection as bp
 from .filtering import make_filter
 from .geometry import CBCTGeometry, projection_matrices
+from .precision import Precision, resolve_precision
 
 Array = jax.Array
 
@@ -44,10 +45,18 @@ def _get_backprojector(impl: BpImpl) -> Callable:
 
 def reconstruct(g: CBCTGeometry, projections: Array,
                 impl: BpImpl = "factorized",
-                window: str = "ramlak") -> Array:
-    """Full FDK: (N_p, N_v, N_u) projections -> (N_x, N_y, N_z) volume."""
+                window: str = "ramlak",
+                precision: Precision | str | None = "fp32") -> Array:
+    """Full FDK: (N_p, N_v, N_u) projections -> (N_x, N_y, N_z) volume.
+
+    `precision` selects the *storage* dtype of the filtered-projection
+    stream (core/precision.py): filtering emits it, back-projection gathers
+    it and accumulates f32. "fp32" (default) preserves the historical exact
+    behaviour; None picks the backend default (bf16 on CPU/TPU).
+    """
+    prec = resolve_precision(precision)
     pmats = jnp.asarray(projection_matrices(g))
-    filt = make_filter(g, window)
+    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
     q = filt(projections)
     backproject = _get_backprojector(impl)
     vol = backproject(pmats, q, g.n_x, g.n_y, g.n_z)
@@ -61,13 +70,14 @@ def gups(g: CBCTGeometry, seconds: float) -> float:
 
 
 def timed_reconstruct(g: CBCTGeometry, projections: Array,
-                      impl: BpImpl = "factorized", iters: int = 3):
+                      impl: BpImpl = "factorized", iters: int = 3,
+                      precision: Precision | str | None = "fp32"):
     """Benchmark helper returning (volume, seconds_per_run, gups)."""
-    vol = reconstruct(g, projections, impl)  # warm-up / compile
+    vol = reconstruct(g, projections, impl, precision=precision)  # warm-up
     jax.block_until_ready(vol)
     t0 = time.perf_counter()
     for _ in range(iters):
-        vol = reconstruct(g, projections, impl)
+        vol = reconstruct(g, projections, impl, precision=precision)
         jax.block_until_ready(vol)
     dt = (time.perf_counter() - t0) / iters
     return vol, dt, gups(g, dt)

@@ -86,31 +86,38 @@ def fft_length(n_u: int) -> int:
     return n
 
 
-@partial(jax.jit, static_argnames=("pad",))
-def _filter_batch(proj: Array, fcos: Array, hf: Array, pad: int, tau_u: float) -> Array:
+@partial(jax.jit, static_argnames=("pad", "out_dtype"))
+def _filter_batch(proj: Array, fcos: Array, hf: Array, pad: int, tau_u: float,
+                  out_dtype=None) -> Array:
     """Alg. 1 over a batch: proj (B, N_v, N_u) -> filtered (B, N_v, N_u)."""
     n_u = proj.shape[-1]
-    e = proj * fcos[None]
+    e = proj.astype(jnp.float32) * fcos[None]
     ef = jnp.fft.rfft(e, n=pad, axis=-1)
     q = jnp.fft.irfft(ef * hf[None, None, :], n=pad, axis=-1)[..., :n_u]
     # Discrete convolution sum approximates the integral: multiply by the
     # sample pitch tau (Kak & Slaney eq. 3.62).
-    return (q * tau_u).astype(proj.dtype)
+    return (q * tau_u).astype(out_dtype or proj.dtype)
 
 
-def make_filter(g: CBCTGeometry, window: str = "ramlak"):
-    """Returns filter_fn(proj: (B, N_v, N_u)) -> (B, N_v, N_u), plus tables."""
+def make_filter(g: CBCTGeometry, window: str = "ramlak", out_dtype=None):
+    """Returns filter_fn(proj: (B, N_v, N_u)) -> (B, N_v, N_u), plus tables.
+
+    `out_dtype` is the *storage* dtype of the emitted filtered projections
+    (the precision policy's half-width stream, see core/precision.py); the
+    FFT convolution itself always runs in f32. None keeps the input dtype.
+    """
     pad = fft_length(g.n_u)
     fcos = jnp.asarray(cosine_weights(g))
     hf = jnp.asarray(ramp_frequency_response(g, window, pad))
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else None
 
     def filter_fn(proj: Array) -> Array:
-        return _filter_batch(proj, fcos, hf, pad, g.tau_u)
+        return _filter_batch(proj, fcos, hf, pad, g.tau_u, out_dtype)
 
     return filter_fn
 
 
 def filter_projections(g: CBCTGeometry, proj: Array,
-                       window: str = "ramlak") -> Array:
+                       window: str = "ramlak", out_dtype=None) -> Array:
     """One-shot filtering of all projections (N_p, N_v, N_u)."""
-    return make_filter(g, window)(proj)
+    return make_filter(g, window, out_dtype)(proj)

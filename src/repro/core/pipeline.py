@@ -22,11 +22,13 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
 from .distributed import _proj_spec, output_spec, shift_pmats_i
 from .fdk import fdk_scale, _get_backprojector, BpImpl
 from .filtering import make_filter
 from .geometry import CBCTGeometry, projection_matrices
+from .precision import Precision, resolve_precision
 
 Array = jax.Array
 
@@ -41,7 +43,8 @@ def shift_pmats_j(pmats: Array, j0) -> Array:
 def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
                      n_steps: int = 2, y_chunks: int = 16,
                      impl: BpImpl = "factorized",
-                     window: str = "ramlak"):
+                     window: str = "ramlak",
+                     precision: Precision | str | None = "fp32"):
     """Beyond-paper (EXPERIMENTS.md §Perf cell C): y-chunked back-projection
     with PER-CHUNK psum_scatter accumulation.
 
@@ -71,7 +74,8 @@ def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
         raise ValueError("shape does not tile over the mesh/chunks")
     nb = np_local // n_steps
     nx_slab = g.n_x // r
-    filt = make_filter(g, window)
+    prec = resolve_precision(precision)
+    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
     backproject = _get_backprojector(impl)
     pmats_all = jnp.asarray(projection_matrices(g))
     scale = fdk_scale(g)
@@ -120,7 +124,7 @@ def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
 
     @jax.jit
     def reconstruct(projections: Array) -> Array:
-        return jax.shard_map(
+        return shard_map(
             rank_fn, mesh=mesh,
             in_specs=(pspec, pspec),
             out_specs=out_sp,
@@ -135,8 +139,14 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
                        impl: BpImpl = "factorized",
                        window: str = "ramlak",
                        reduce: Literal["psum", "scatter"] = "scatter",
+                       precision: Precision | str | None = "fp32",
                        ) -> Callable[[Array], Array]:
-    """Pipelined reconstruction; same interface as make_distributed_fdk."""
+    """Pipelined reconstruction; same interface as make_distributed_fdk.
+
+    With a low-precision `precision` policy the per-step AllGather moves
+    half-width bytes *and* overlaps with the previous batch's f32-accumulate
+    back-projection — the two paper speedups compose.
+    """
     r = axis_size(mesh, AXIS_MODEL)
     c = axis_size(mesh, AXIS_POD, AXIS_DATA)
     n_ranks = r * c
@@ -148,7 +158,8 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
     nb = np_local // n_steps          # local batch per pipeline step
     nx_slab = g.n_x // r
     dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
-    filt = make_filter(g, window)
+    prec = resolve_precision(precision)
+    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
     backproject = _get_backprojector(impl)
     pmats_all = jnp.asarray(projection_matrices(g))
     scale = fdk_scale(g)
@@ -200,7 +211,7 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
 
     @jax.jit
     def reconstruct(projections: Array) -> Array:
-        return jax.shard_map(
+        return shard_map(
             rank_fn, mesh=mesh,
             in_specs=(pspec, pspec),
             out_specs=out_sp,

@@ -1,0 +1,122 @@
+"""Storage-precision policy for the projection stream (paper §3.2).
+
+iFDK stores filtered projections as FP16 textures: the back-projection hot
+loop reads half-width taps (halving HBM/texture traffic) while the voxel
+accumulator stays in FP32 — and, at scale, the MPI AllGather of filtered
+projections (the dominant communication term, §4.1.3) moves half the bytes.
+This module is the single source of truth for that trade:
+
+  * ``storage``  — the dtype filtered projections are *stored and
+                   communicated* in (``fp32`` | ``bf16`` | ``fp16``).
+  * accumulation — always float32, in every back-projection implementation
+                   (reference, factorized, Pallas kernel, MXU): taps are
+                   upcast after the gather, before the w = 1/z^2 FMA.
+
+The policy rides through ``fdk.reconstruct``, ``make_distributed_fdk``,
+``make_pipelined_fdk`` and ``make_chunked_fdk`` as a ``precision=`` argument
+(a ``Precision``, a storage-dtype name, or None for the backend default).
+
+Default selection: ``bf16`` on CPU/TPU (same exponent range as f32 — no
+overflow concern for ramp-filtered projections, which can exceed fp16's
+65504 for high-contrast scans), ``fp16`` on GPU (texture-unit heritage,
+matches the paper's choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STORAGE_DTYPES = {
+    "fp32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+}
+_CANONICAL = {
+    "float32": "fp32", "f32": "fp32",
+    "bfloat16": "bf16",
+    "float16": "fp16", "half": "fp16",
+}
+
+
+def default_storage(backend: str | None = None) -> str:
+    """bf16 on CPU/TPU, fp16 on GPU (the paper's texture dtype)."""
+    backend = backend or jax.default_backend()
+    return "fp16" if backend == "gpu" else "bf16"
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Projection-stream precision policy: storage dtype + f32 accumulate."""
+
+    storage: str = "fp32"
+
+    def __post_init__(self):
+        name = _CANONICAL.get(self.storage, self.storage)
+        if name not in _STORAGE_DTYPES:
+            raise ValueError(
+                f"unknown storage precision {self.storage!r}; "
+                f"choose from {sorted(_STORAGE_DTYPES)}"
+            )
+        object.__setattr__(self, "storage", name)
+
+    @property
+    def storage_dtype(self) -> jnp.dtype:
+        return jnp.dtype(_STORAGE_DTYPES[self.storage])
+
+    @property
+    def accum_dtype(self) -> jnp.dtype:
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def storage_bytes(self) -> int:
+        return self.storage_dtype.itemsize
+
+    def eps(self) -> float:
+        """Machine epsilon of the storage dtype (the quantization step)."""
+        return float(jnp.finfo(self.storage_dtype).eps)
+
+    def rmse_tol(self) -> float:
+        """Relative-RMSE acceptance bound vs an fp32 oracle.
+
+        Quantizing the projections to storage dtype perturbs each tap by at
+        most eps/2 relative; the weighted sum over N_p projections averages
+        the independent rounding errors, so a small multiple of eps bounds
+        the volume RMSE with margin. fp32 keeps the paper's 1e-5 bound.
+        """
+        return max(1e-5, 2.0 * self.eps())
+
+    def max_tol(self) -> float:
+        """Relative max-abs-error bound vs an fp32 oracle (no averaging)."""
+        return max(1e-4, 8.0 * self.eps())
+
+    def allgather_bytes(self, n_proj: int, n_v: int, n_u: int) -> int:
+        """Per-rank AllGather payload for the filtered-projection stream."""
+        return n_proj * n_v * n_u * self.storage_bytes
+
+
+def resolve_precision(precision: "Precision | str | None") -> Precision:
+    """None -> backend default; str -> Precision(str); Precision -> itself."""
+    if precision is None:
+        return Precision(default_storage())
+    if isinstance(precision, str):
+        return Precision(precision)
+    return precision
+
+
+def psnr(x, ref, data_range: float | None = None) -> float:
+    """Peak signal-to-noise ratio of x against ref, in dB.
+
+    Used by the golden-value regression tests: a reconstruction-quality
+    floor that any kernel/precision change must clear.
+    """
+    x = np.asarray(x, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if data_range is None:
+        data_range = float(ref.max() - ref.min())
+    mse = float(np.mean((x - ref) ** 2))
+    if mse == 0.0:
+        return float("inf")
+    return 10.0 * np.log10(data_range * data_range / mse)

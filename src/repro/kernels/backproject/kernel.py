@@ -21,8 +21,10 @@ VMEM working set per grid step:
     out tile   Bi*Bj*2*nzh*4 B
   + qt batch   Bs*Nu*Nv*{2,4} B
   + pmats      Bs*12*4 B
-The defaults (Bi=Bj=8, Bs=8) keep this under ~8 MiB for 1k-wide detectors;
-`vmem_bytes()` lets callers budget explicitly.
+`vmem_bytes()` is the budgeting model the autotuner (tune.py) prunes block
+candidates with. The projection batch may arrive in bf16/fp16 (the precision
+policy's storage stream — halving the qt term); taps are upcast to f32 at
+the gather, and the accumulator tile is always f32.
 
 This container is CPU-only: the kernel is exercised with interpret=True
 (Python semantics of the same body). On real TPU hardware the flat `take`

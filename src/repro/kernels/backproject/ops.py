@@ -16,16 +16,9 @@ import jax.numpy as jnp
 
 from repro.core.backprojection import from_dual_slab
 from .kernel import backproject_dual_pallas
+from . import tune
 
 Array = jax.Array
-
-
-def _pick_block(n: int, target: int = 8) -> int:
-    """Largest divisor of n that is <= target (block shapes must tile)."""
-    for b in range(min(target, n), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
 
 
 def _on_tpu() -> bool:
@@ -36,19 +29,31 @@ def backproject_pallas(pmats: Array, proj: Array,
                        nx: int, ny: int, nz: int,
                        bi: int | None = None, bj: int | None = None,
                        bs: int | None = None,
-                       interpret: bool | None = None) -> Array:
+                       interpret: bool | None = None,
+                       vmem_budget: int | None = None) -> Array:
     """Alg. 4 via the Pallas kernel. Same signature/result as the oracles.
 
-    pmats: (Np, 3, 4); proj: (Np, N_v, N_u) filtered projections (row = v).
+    pmats: (Np, 3, 4); proj: (Np, N_v, N_u) filtered projections (row = v),
+    in any storage dtype (fp32/bf16/fp16 — the precision policy's stream);
+    taps are upcast inside the kernel and accumulation is always f32.
     Returns (nx, ny, nz) float32.
+
+    Block shapes not given explicitly come from the VMEM-budget autotuner
+    (tune.pick_blocks): candidates that tile the problem, pruned against
+    `vmem_budget` (default REPRO_BP_VMEM_BUDGET), model-ranked — or timed
+    once per (geometry, dtype) when REPRO_BP_AUTOTUNE=time.
     """
     n_p = proj.shape[0]
-    bi = bi or _pick_block(nx)
-    bj = bj or _pick_block(ny)
-    bs = bs or _pick_block(n_p)
     if interpret is None:
         interpret = not _on_tpu()
     qt = jnp.swapaxes(proj, -1, -2)  # (Np, Nu, Nv): v contiguous
+    nu, nv = qt.shape[1], qt.shape[2]
+    if bi is None or bj is None or bs is None:
+        bi, bj, bs = tune.pick_blocks(
+            nx, ny, nz, n_p, nu, nv, qt_dtype=qt.dtype,
+            budget=vmem_budget, interpret=interpret,
+            fix_bi=bi, fix_bj=bj, fix_bs=bs,
+        )
     pm = pmats.reshape(n_p, 12).astype(jnp.float32)
     if n_p % bs:
         pad = bs - n_p % bs

@@ -1,0 +1,219 @@
+"""VMEM-budget-aware block autotuner for the Pallas back-projection kernel.
+
+Replaces the naive largest-divisor-<=8 block choice: the (bi, bj, bs) tile
+shape determines both the VMEM working set (kernel.vmem_bytes) and the HBM
+traffic — the projection batch is re-streamed once per (gi, gj) output tile,
+so total Q^T traffic is (nx/bi)*(ny/bj) * Np*Nu*Nv*itemsize. The tuner
+
+  1. enumerates candidates that tile the problem (bi | nx, bj | ny, bs a
+     power of two — ops.py pads the projection axis),
+  2. prunes them against a configurable VMEM budget with the kernel's own
+     vmem_bytes() model (storage dtype aware: bf16/fp16 projections double
+     the feasible batch),
+  3. ranks the survivors by the traffic model, and — in measured mode —
+     times the few best with the real kernel once per (geometry, dtype),
+     memoized in an in-process cache.
+
+Knobs:
+  REPRO_BP_VMEM_BUDGET   VMEM budget in bytes (default 8 MiB — half of a
+                         TPU core's ~16 MiB, leaving room for double
+                         buffering and spills).
+  REPRO_BP_AUTOTUNE      "time" to measure survivors on every first use of
+                         a geometry (default: model-ranked pick, no timing
+                         — interpret-mode timing is python-speed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import warnings
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import backproject_dual_pallas, vmem_bytes
+
+DEFAULT_VMEM_BUDGET = int(os.environ.get("REPRO_BP_VMEM_BUDGET", 8 * 2**20))
+_BLOCK_CAP = 64  # largest tile edge / projection batch considered
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One kernel tiling: output tile (bi, bj), projection batch bs."""
+
+    bi: int
+    bj: int
+    bs: int
+    vmem: int            # working-set bytes under kernel.vmem_bytes()
+    elapsed: float = 0.0  # measured seconds/call (0.0 = model-ranked only)
+
+    def as_tuple(self) -> Tuple[int, int, int]:
+        return self.bi, self.bj, self.bs
+
+
+_CACHE: Dict[tuple, BlockConfig] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_info() -> Dict[tuple, BlockConfig]:
+    return dict(_CACHE)
+
+
+def _divisors(n: int, cap: int) -> List[int]:
+    return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+
+
+def _pow2_leq(n: int, cap: int) -> List[int]:
+    out, b = [], 1
+    while b <= min(n, cap):
+        out.append(b)
+        b *= 2
+    return out
+
+
+def candidate_blocks(nx: int, ny: int, n_p: int, nu: int, nv: int, nzh: int,
+                     qt_dtype=jnp.float32, budget: int | None = None,
+                     fix_bi: int | None = None, fix_bj: int | None = None,
+                     fix_bs: int | None = None) -> List[BlockConfig]:
+    """All (bi, bj, bs) that tile the problem and fit the VMEM budget.
+
+    fix_* pins a dimension the caller chose explicitly; the remaining
+    dimensions are tuned around it so the joint config still fits.
+    """
+    budget = DEFAULT_VMEM_BUDGET if budget is None else budget
+    bis = [fix_bi] if fix_bi else _divisors(nx, _BLOCK_CAP)
+    bjs = [fix_bj] if fix_bj else _divisors(ny, _BLOCK_CAP)
+    bss = [fix_bs] if fix_bs else _pow2_leq(n_p, _BLOCK_CAP)
+    out = []
+    for bi in bis:
+        for bj in bjs:
+            for bs in bss:
+                vm = vmem_bytes(bi, bj, bs, nu, nv, nzh, qt_dtype)
+                if vm <= budget:
+                    out.append(BlockConfig(bi, bj, bs, vm))
+    return out
+
+
+def _traffic_score(c: BlockConfig, n_p: int) -> tuple:
+    """Rank key, larger = better: minimize Q^T re-streaming (maximize the
+    output tile), then minimize padded projection work (ops.py zero-pads
+    n_p up to a bs multiple — wasted back-projection per tile), then
+    amortize per-batch overhead (maximize bs)."""
+    padded = -(-n_p // c.bs) * c.bs
+    return (c.bi * c.bj, -padded, c.bs, -c.vmem)
+
+
+def _time_candidate(c: BlockConfig, nx: int, ny: int, nz: int, n_p: int,
+                    nu: int, nv: int, qt_dtype, interpret: bool,
+                    iters: int) -> float:
+    n_pad = -(-n_p // c.bs) * c.bs  # padding overhead is part of the cost
+    pm = np.zeros((n_pad, 12), np.float32)
+    pm[:, 11] = 1.0  # z == 1: no division hazard on synthetic data
+    pm = jnp.asarray(pm)
+    qt = jnp.zeros((n_pad, nu, nv), qt_dtype)
+    run = lambda: backproject_dual_pallas(  # noqa: E731
+        pm, qt, nx, ny, nz, bi=c.bi, bj=c.bj, bs=c.bs, interpret=interpret
+    )
+    jax.block_until_ready(run())  # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(run())
+    return (time.perf_counter() - t0) / iters
+
+
+def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
+             qt_dtype=jnp.float32, budget: int | None = None,
+             interpret: bool | None = None, measure: bool = True,
+             max_measure: int = 4, iters: int = 1,
+             fix_bi: int | None = None, fix_bj: int | None = None,
+             fix_bs: int | None = None, strict: bool = True) -> BlockConfig:
+    """Best block config for one (geometry, dtype), memoized in-process.
+
+    With measure=True the top-`max_measure` model-ranked survivors are each
+    timed once with the real kernel on synthetic data of the true shape;
+    measure=False returns the model-ranked winner without running anything.
+
+    strict=True raises when nothing fits the budget; strict=False falls
+    back to the minimal-working-set tiling with a warning (a detector so
+    wide that even bs=1 overflows should still reconstruct, just slowly).
+    """
+    if nz % 2:
+        raise ValueError("back-projection kernel requires even N_z")
+    budget = DEFAULT_VMEM_BUDGET if budget is None else budget
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt_dtype = jnp.dtype(qt_dtype)
+    key = (nx, ny, nz, n_p, nu, nv, qt_dtype.str, budget, interpret, measure,
+           max_measure, iters, fix_bi, fix_bj, fix_bs, strict)
+    if key in _CACHE:
+        return _CACHE[key]
+
+    cands = candidate_blocks(nx, ny, n_p, nu, nv, nz // 2, qt_dtype, budget,
+                             fix_bi, fix_bj, fix_bs)
+    if not cands:
+        if strict:
+            raise ValueError(
+                f"no (bi, bj, bs) tiling of ({nx}, {ny}, Np={n_p}) fits the "
+                f"VMEM budget of {budget} bytes (detector {nu}x{nv}); "
+                "raise REPRO_BP_VMEM_BUDGET or shrink the detector batch"
+            )
+        # The qt batch is what overflowed (it already does at bs=1): keep it
+        # minimal and tune the rest normally, rather than refusing to run.
+        unbounded = candidate_blocks(nx, ny, n_p, nu, nv, nz // 2, qt_dtype,
+                                     2**62, fix_bi, fix_bj, fix_bs)
+        bs_min = min(c.bs for c in unbounded)
+        pool = [c for c in unbounded if c.bs == bs_min]
+        best = max(pool, key=lambda c: _traffic_score(c, n_p))
+        warnings.warn(
+            f"back-projection working set exceeds the VMEM budget of "
+            f"{budget} bytes even at bs={bs_min} (detector {nu}x{nv}); "
+            f"proceeding with {best.as_tuple()} ({best.vmem} bytes)"
+        )
+        _CACHE[key] = best
+        return best
+    ranked = sorted(cands, key=lambda c: _traffic_score(c, n_p),
+                    reverse=True)
+    if measure and len(ranked) > 1:
+        timed = [
+            dataclasses.replace(
+                c, elapsed=_time_candidate(c, nx, ny, nz, n_p, nu, nv,
+                                           qt_dtype, interpret, iters)
+            )
+            for c in ranked[:max_measure]
+        ]
+        best = min(timed, key=lambda c: c.elapsed)
+    else:
+        best = ranked[0]
+    _CACHE[key] = best
+    return best
+
+
+def pick_blocks(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
+                qt_dtype=jnp.float32, budget: int | None = None,
+                interpret: bool | None = None,
+                measure: bool | None = None,
+                fix_bi: int | None = None, fix_bj: int | None = None,
+                fix_bs: int | None = None) -> Tuple[int, int, int]:
+    """ops.py entry point: (bi, bj, bs) under the VMEM budget.
+
+    measure=None defers to REPRO_BP_AUTOTUNE ("time" enables measured
+    tuning); the default model-ranked pick costs one table scan, so it is
+    safe on every call path (results are cached either way). fix_* pins
+    dimensions the caller specified so the tuned remainder still respects
+    the budget jointly.
+    """
+    if measure is None:
+        measure = os.environ.get("REPRO_BP_AUTOTUNE", "") == "time"
+    # An explicitly passed budget is a hard constraint; the env/default
+    # budget degrades to minimal blocks + warning so oversized detectors
+    # still reconstruct (the pre-autotuner behaviour).
+    return autotune(nx, ny, nz, n_p, nu, nv, qt_dtype=qt_dtype,
+                    budget=budget, interpret=interpret, measure=measure,
+                    fix_bi=fix_bi, fix_bj=fix_bj, fix_bs=fix_bs,
+                    strict=budget is not None).as_tuple()

@@ -1,0 +1,59 @@
+"""Optional-hypothesis shim.
+
+With `hypothesis` installed the property tests run as real property tests.
+Without it (this container ships no hypothesis), `given`/`settings`/`st`
+degrade to a deterministic pytest.mark.parametrize fallback: each strategy
+contributes a fixed sample pool and the test runs once per zipped sample
+tuple — the same properties, exercised on a small fixed grid, so
+`pytest -x -q` never dies at collection and the round-trip/equivalence
+properties keep coverage either way.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import pytest
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(lo, hi):
+            span = hi - lo
+            picks = {lo, hi, lo + span // 3, lo + (2 * span) // 3,
+                     lo + span // 7}
+            return _Strategy(sorted(picks))
+
+        @staticmethod
+        def floats(lo, hi, **_kw):
+            span = hi - lo
+            return _Strategy([lo, lo + 0.37 * span, lo + 0.73 * span, hi])
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(list(xs))
+
+    st = _FallbackStrategies()
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**kwargs):
+        names = sorted(kwargs)
+        pools = [kwargs[n].samples for n in names]
+        width = max(len(p) for p in pools)
+        cases = [tuple(p[i % len(p)] for p in pools) for i in range(width)]
+        if len(names) == 1:
+            cases = [c[0] for c in cases]
+
+        def deco(fn):
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco

@@ -10,6 +10,17 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    # Fast tier: `pytest -m "not slow"` (~90 s on this container, vs ~6 min
+    # full) skips the multi-minute subprocess/distributed runs and the
+    # heavyweight LM smoke configs; the full suite runs everything.
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute subprocess/distributed or heavyweight smoke "
+        "tests; deselect with -m 'not slow' for the fast tier",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

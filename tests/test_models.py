@@ -18,7 +18,18 @@ from repro.models.transformer import (
 from repro.training import init_train_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)
-ARCHS = list_archs()
+
+# Fast tier keeps one cheap full-path arch; the rest of the per-arch smoke
+# matrix (several seconds to a minute each on CPU) runs with the slow tier.
+_FAST_ARCHS = {"mamba2_130m"}
+
+
+def _slow_except_fast(archs):
+    return [a if a in _FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
+
+ARCHS = _slow_except_fast(list_archs())
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -55,6 +66,7 @@ def test_smoke_train_step(arch):
         assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     cfg = get_smoke_config("qwen2_1_5b")
     state = init_train_state(cfg, KEY)
@@ -68,8 +80,9 @@ def test_train_loss_decreases():
 
 
 @pytest.mark.parametrize(
-    "arch", ["qwen2_1_5b", "mixtral_8x7b", "mamba2_130m", "jamba_1_5_large",
-             "musicgen_large"]
+    "arch",
+    _slow_except_fast(["qwen2_1_5b", "mixtral_8x7b", "mamba2_130m",
+                       "jamba_1_5_large", "musicgen_large"]),
 )
 def test_decode_matches_forward_f32(arch):
     """prefill(S) + decode(token S) == full forward at position S (f32)."""
@@ -127,9 +140,10 @@ def test_musicgen_head_shapes():
     assert logits.shape == (2, 8, 4, cfg.vocab_size)
 
 
+@pytest.mark.slow
 def test_param_count_formula_matches_init():
     """Analytic count_params (used by the roofline) == actual leaf sizes."""
-    for arch in ARCHS:
+    for arch in list_archs():
         cfg = get_smoke_config(arch)
         params = init_params(cfg, KEY)
         actual = sum(int(p.size) for p in jax.tree.leaves(params))
@@ -157,6 +171,7 @@ def test_full_config_param_counts_sane():
         assert lo < n < hi, f"{arch}: {n/1e9:.2f}B params out of range"
 
 
+@pytest.mark.slow
 def test_sliding_window_masks_distant_tokens():
     cfg = dataclasses.replace(
         get_smoke_config("mixtral_8x7b"), sliding_window=4, dtype="float32"

@@ -44,6 +44,7 @@ class TestMoE:
         # ceil(64 * 2 / 8 * 1.25) = 20
         assert capacity(cfg, 64) == 20
 
+    @pytest.mark.slow
     def test_high_capacity_no_drops_matches_dense_mixture(self):
         """With capacity covering everything, MoE == explicit per-token
         mixture of expert MLPs."""
@@ -70,6 +71,7 @@ class TestMoE:
         np.testing.assert_allclose(np.array(out), np.array(want),
                                    rtol=2e-4, atol=2e-5)
 
+    @pytest.mark.slow
     def test_capacity_drops_tokens(self):
         """Tiny capacity must drop overflow tokens (outputs differ from the
         undropped computation) without NaNs."""

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.models.config import SSMConfig
@@ -33,6 +33,7 @@ def _inputs(B=2, L=24):
 
 class TestSSD:
     @pytest.mark.parametrize("c1,c2", [(1, 16), (4, 16), (8, 32)])
+    @pytest.mark.slow
     def test_chunk_size_invariance(self, c1, c2):
         """The chunked algorithm must be independent of the chunk size
         (state-space duality: quadratic-intra + linear-inter is exact)."""
@@ -43,6 +44,7 @@ class TestSSD:
         np.testing.assert_allclose(np.array(y1), np.array(y2),
                                    rtol=1e-4, atol=1e-5)
 
+    @pytest.mark.slow
     def test_non_divisible_length_padding(self):
         """L % chunk != 0 is handled by inert zero-padding."""
         u = _inputs(L=19)
@@ -52,6 +54,7 @@ class TestSSD:
         np.testing.assert_allclose(np.array(y16), np.array(y1),
                                    rtol=1e-4, atol=1e-5)
 
+    @pytest.mark.slow
     def test_decode_equals_chunked(self):
         """Sequential recurrent decode reproduces the chunked outputs."""
         cfg = _cfg()
@@ -72,6 +75,7 @@ class TestSSD:
         np.testing.assert_allclose(np.array(yd), np.array(y_full),
                                    rtol=1e-4, atol=1e-5)
 
+    @pytest.mark.slow
     def test_prefill_cache_handoff(self):
         """return_cache=True lets decode continue the stream exactly."""
         cfg = _cfg()

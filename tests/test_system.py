@@ -3,6 +3,7 @@ serving loop, exercised through the public API only."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.fdk import reconstruct, timed_reconstruct
 from repro.core.geometry import default_geometry
@@ -29,6 +30,7 @@ def test_full_ct_pipeline_public_api():
     assert rate > 0 and np.isfinite(rate)
 
 
+@pytest.mark.slow
 def test_greedy_generation_runs():
     """Serving loop: prefill a prompt, decode 4 tokens, stable output."""
     cfg = get_smoke_config("qwen2_1_5b")
