@@ -72,12 +72,13 @@ def _time(fn, iters):
     return (time.perf_counter() - t0) / iters
 
 
-def run(iters: int = 2):
+def run(iters: int = 2, fast: bool = False):
     import numpy as np
     from repro.core.geometry import projection_matrices
     rows = []
     rng = np.random.default_rng(0)
-    for n_det, n_proj, n_out in CASES:
+    cases = CASES[:1] if fast else CASES  # smoke: one tiny case
+    for n_det, n_proj, n_out in cases:
         g = _case_geometry(n_det, n_proj, n_out)
         pm = jnp.asarray(projection_matrices(g))
         q = jnp.asarray(rng.normal(size=g.proj_shape()), jnp.float32)

@@ -3,27 +3,42 @@
 Measured end-to-end (filter + back-project) on CPU at reduced scale, plus
 the performance-model projection of the paper's three output sizes
 (2048^3, 4096^3, 8192^3 from 2048^2 x 4096 input).
+
+The measured rows are driven by the plan/engine layer: `plan_spec` (the
+driver's ``--plan`` flag) selects any point of the schedule x reduce x
+precision x impl cross-product with one string, e.g.
+``"schedule=pipelined,n_steps=2,precision=bf16"``.
 """
 from __future__ import annotations
 
+from benchmarks.bench_backprojection import _time
+
 from repro.core.distributed import IFDKGrid
-from repro.core.fdk import timed_reconstruct
+from repro.core.fdk import gups
 from repro.core.geometry import CBCTGeometry, default_geometry
 from repro.core.perf_model import ABCI, gups_end_to_end, predict
 from repro.core.phantom import forward_project
+from repro.core.plan import plan_from_spec
 
 
-def run(iters: int = 2):
+def run(iters: int = 2, fast: bool = False, plan_spec: str | None = None):
     rows = []
-    # measured (reduced-scale, CPU)
-    for n, npj in [(32, 64), (48, 96)]:
+    # measured (reduced-scale, CPU), one plan per impl — or the caller's spec
+    cases = [(16, 32)] if fast else [(32, 64), (48, 96)]
+    impls = ("factorized",) if fast else ("reference", "factorized")
+    specs = [plan_spec] if plan_spec else [f"impl={i}" for i in impls]
+    for n, npj in cases:
         g = default_geometry(n, n_proj=npj)
         proj = forward_project(g)
-        for impl in ("reference", "factorized"):
-            _, dt, rate = timed_reconstruct(g, proj, impl=impl, iters=iters)
+        for spec in specs:
+            plan = plan_from_spec(g, spec)
+            fn = plan.build()
+            dt = _time(lambda: fn(proj), iters)
+            d = plan.describe()
+            tag = f"{d['schedule']}/{d['impl']}/{d['precision']}"
             rows.append((
-                f"fig6/measured/{n}^3x{npj}/{impl}", dt * 1e6,
-                f"{rate:.3f}GUPS",
+                f"fig6/measured/{n}^3x{npj}/{tag}", dt * 1e6,
+                f"{gups(g, dt):.3f}GUPS",
             ))
     # projected (paper scale, paper constants)
     for n_out, r, c in [(2048, 4, 4), (4096, 32, 8), (8192, 256, 8)]:

@@ -11,10 +11,11 @@ from repro.core.filtering import make_filter
 from repro.core.geometry import default_geometry
 
 
-def run(iters: int = 3):
+def run(iters: int = 3, fast: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    for n, batch in [(64, 32), (128, 32), (256, 16)]:
+    cases = [(64, 8)] if fast else [(64, 32), (128, 32), (256, 16)]
+    for n, batch in cases:
         g = default_geometry(n, n_proj=batch)
         filt = make_filter(g)
         proj = jnp.asarray(

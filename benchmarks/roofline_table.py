@@ -48,7 +48,9 @@ def render(path: str = ART) -> str:
     return "\n".join(lines)
 
 
-def run(iters: int = 0):
+def run(iters: int = 0, fast: bool = False):
+    # Reads pre-computed dry-run artifacts — no compute; `fast` is a no-op
+    # accepted for driver uniformity.
     recs = load()
     rows = []
     for (arch, shape, mesh), r in recs.items():

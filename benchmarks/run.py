@@ -1,11 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   python benchmarks/run.py                 # full sweep, all suites
+#   python benchmarks/run.py --suite fig6    # one suite (repeatable flag)
+#   python benchmarks/run.py --fast          # tiny-geometry smoke of every
+#                                            # suite (CI tier)
+#   python benchmarks/run.py --plan "schedule=pipelined,n_steps=2" \
+#       --suite fig6                         # plan spec drives the
+#                                            # end-to-end harness
+#
+# A failing suite prints a single ``<name>,nan,FAILED`` row (its partial
+# rows are suppressed — no half-tables masquerading as results), the
+# traceback goes to stderr, and the exit status is nonzero.
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (
         bench_backprojection, bench_end_to_end, bench_filtering,
         bench_scaling_model, roofline_table,
@@ -17,16 +30,37 @@ def main() -> None:
         ("fig6", bench_end_to_end.run),           # end-to-end GUPS
         ("roofline", roofline_table.run),         # dry-run roofline terms
     ]
+    names = [n for n, _ in suites]
+    ap = argparse.ArgumentParser(description="iFDK benchmark driver")
+    ap.add_argument("--suite", action="append", choices=names,
+                    help="run only this suite (repeatable; default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny-geometry smoke mode for every suite")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations (default: per-suite)")
+    ap.add_argument("--plan", default=None, metavar="SPEC",
+                    help="ReconstructionPlan spec for the end-to-end suite, "
+                         "e.g. 'schedule=pipelined,n_steps=2,precision=bf16'")
+    args = ap.parse_args(argv)
+
+    selected = [s for s in suites if not args.suite or s[0] in args.suite]
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
+    for name, fn in selected:
+        kwargs = {"fast": args.fast}
+        if args.iters is not None:
+            kwargs["iters"] = args.iters
+        if name == "fig6" and args.plan:
+            kwargs["plan_spec"] = args.plan
         try:
-            for row, us, derived in fn():
-                print(f"{row},{us:.1f},{derived}")
+            rows = list(fn(**kwargs))
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"{name},nan,FAILED")
+            continue
+        for row, us, derived in rows:
+            print(f"{row},{us:.1f},{derived}")
     if failures:
         sys.exit(1)
 

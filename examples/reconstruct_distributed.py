@@ -22,7 +22,7 @@ from repro.core.distributed import input_sharding
 from repro.core.fdk import fdk_scale, gups, reconstruct
 from repro.core.geometry import default_geometry
 from repro.core.phantom import forward_project
-from repro.core.pipeline import make_chunked_fdk
+from repro.core.plan import ReconstructionPlan
 from repro.parallel.mesh import make_mesh
 from repro.runtime import ResumableReconstruction, StragglerMonitor
 
@@ -34,7 +34,13 @@ def main():
           f"{g.n_u}^2 x {g.n_proj} -> {g.n_x}^3")
 
     proj = forward_project(g)
-    fn = make_chunked_fdk(mesh, g, n_steps=2, y_chunks=4)
+    # The chunked schedule with per-chunk reduce-scatter: minimal live slab
+    # state, output left sharded for the parallel store (paper Fig. 4
+    # streaming applied to the output side).
+    plan = ReconstructionPlan(geometry=g, mesh=mesh, schedule="chunked",
+                              n_steps=2, y_chunks=4, reduce="scatter")
+    print(f"plan: {plan.describe()}")
+    fn = plan.build()
     out = fn(jax.device_put(proj, input_sharding(mesh)))
     vol = np.array(out).reshape(g.n_x, g.n_y, g.n_z)
     ref = np.array(reconstruct(g, proj))

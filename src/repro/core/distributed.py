@@ -25,22 +25,15 @@ Adaptations (documented in DESIGN.md §2/§9):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Literal
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map
-from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
-from .backprojection import backproject_factorized
-from .filtering import make_filter
-from .fdk import fdk_scale, _get_backprojector, BpImpl
-from .geometry import CBCTGeometry, projection_matrices
-from .precision import Precision, resolve_precision
+from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL
+from .fdk import BpImpl
+from .geometry import CBCTGeometry
+from .precision import Precision
 
 Array = jax.Array
 
@@ -74,8 +67,17 @@ def choose_grid(g: CBCTGeometry, n_devices: int,
         raise ValueError(
             f"volume needs R={r} slabs but only {n_devices} devices available"
         )
-    while n_devices % r:
-        r *= 2  # keep the grid rectangular
+    # The grid must be rectangular: R has to divide n_devices. R is a power
+    # of two, and if 2^k does not divide n_devices no larger power of two
+    # does either — so a non-divisible R is unfixable, not growable (the old
+    # `while n_devices % r: r *= 2` loop never terminated here).
+    if n_devices % r:
+        raise ValueError(
+            f"memory bound needs R={r} volume slabs, but {r} does not "
+            f"divide n_devices={n_devices}; use a device count whose "
+            f"largest power-of-two factor is at least {r}, or raise "
+            "sub_vol_bytes"
+        )
     return IFDKGrid(r=r, c=n_devices // r)
 
 
@@ -123,52 +125,12 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
     paper's dominant communication term — so bf16/fp16 halves the gathered
     bytes per rank; back-projection upcasts taps and accumulates f32, and
     the volume Reduce stays f32.
+
+    Deprecated-but-stable alias: a thin wrapper over
+    ``ReconstructionPlan(..., schedule="fused").build()`` (core/plan.py).
     """
-    prec = resolve_precision(precision)
-    r = axis_size(mesh, AXIS_MODEL)
-    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
-    if g.n_proj % (r * c):
-        raise ValueError(f"N_p={g.n_proj} must divide over {r * c} ranks")
-    if g.n_x % r:
-        raise ValueError(f"N_x={g.n_x} must divide into R={r} slabs")
-    nx_slab = g.n_x // r
-    dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
-    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
-    backproject = _get_backprojector(impl)
-    pmats_all = jnp.asarray(projection_matrices(g))
-    scale = fdk_scale(g)
-
-    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
-        # --- filtering stage (paper: CPU/IPP; here: fused, see DESIGN §2)
-        q_local = filt(proj_local)
-        # --- paper Fig. 3b: AllGather within the column (model axis)
-        q_col = lax.all_gather(q_local, AXIS_MODEL, axis=0, tiled=True)
-        pm_col = lax.all_gather(pmats_local, AXIS_MODEL, axis=0, tiled=True)
-        # --- back-project this rank's x-slab (offset folded into P)
-        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
-        pm_slab = shift_pmats_i(pm_col, i0.astype(pm_col.dtype))
-        slab = backproject(pm_slab, q_col, nx_slab, g.n_y, g.n_z)
-        # --- paper Fig. 3b: Reduce within the row (data/pod axes)
-        if reduce == "scatter":
-            slab = lax.psum_scatter(slab, dp[-1], scatter_dimension=1,
-                                    tiled=True)
-            if len(dp) == 2:  # multi-pod: finish the reduction across pods
-                slab = lax.psum(slab, dp[0])
-        else:
-            for a in dp:
-                slab = lax.psum(slab, a)
-        return slab * scale
-
-    pspec = _proj_spec(mesh)
-    out_sp = output_spec(mesh, reduce)
-
-    @jax.jit
-    def reconstruct(projections: Array) -> Array:
-        return shard_map(
-            rank_fn, mesh=mesh,
-            in_specs=(pspec, pspec),
-            out_specs=out_sp,
-            check_vma=False,
-        )(pmats_all, projections)
-
-    return reconstruct
+    from .plan import ReconstructionPlan
+    return ReconstructionPlan(
+        geometry=g, mesh=mesh, impl=impl, window=window,
+        schedule="fused", reduce=reduce, precision=precision,
+    ).build()

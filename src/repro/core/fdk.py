@@ -1,7 +1,9 @@
-"""Single-device FDK pipeline: filtering -> back-projection -> scaling.
+"""Single-device FDK entry point + shared helpers (scale, GUPS metric).
 
-The paper's end-to-end per-device work, used as the building block of the
-distributed framework (core/distributed.py) and as the oracle for tests.
+`reconstruct` is the historical oracle API, now a thin wrapper over the
+plan/engine layer (core/plan.py) with `mesh=None, schedule="fused"`; the
+distributed builders in core/distributed.py and core/pipeline.py are the
+same engine at other plan points.
 """
 from __future__ import annotations
 
@@ -9,12 +11,10 @@ import time
 from typing import Callable, Literal
 
 import jax
-import jax.numpy as jnp
 
 from . import backprojection as bp
-from .filtering import make_filter
-from .geometry import CBCTGeometry, projection_matrices
-from .precision import Precision, resolve_precision
+from .geometry import CBCTGeometry
+from .precision import Precision
 
 Array = jax.Array
 
@@ -49,18 +49,22 @@ def reconstruct(g: CBCTGeometry, projections: Array,
                 precision: Precision | str | None = "fp32") -> Array:
     """Full FDK: (N_p, N_v, N_u) projections -> (N_x, N_y, N_z) volume.
 
+    Deprecated-but-stable alias: a thin wrapper over the plan/engine layer
+    (`core/plan.py`) — equivalent to
+    ``ReconstructionPlan(geometry=g, impl=impl, window=window,
+    precision=precision).build()(projections)``. New code should hold the
+    plan (and its built function) directly; built engines are cached per
+    plan, so calling this repeatedly does not re-trace.
+
     `precision` selects the *storage* dtype of the filtered-projection
     stream (core/precision.py): filtering emits it, back-projection gathers
     it and accumulates f32. "fp32" (default) preserves the historical exact
     behaviour; None picks the backend default (bf16 on CPU/TPU).
     """
-    prec = resolve_precision(precision)
-    pmats = jnp.asarray(projection_matrices(g))
-    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
-    q = filt(projections)
-    backproject = _get_backprojector(impl)
-    vol = backproject(pmats, q, g.n_x, g.n_y, g.n_z)
-    return vol * fdk_scale(g)
+    from .plan import ReconstructionPlan
+    plan = ReconstructionPlan(geometry=g, impl=impl, window=window,
+                              precision=precision)
+    return plan.build()(projections)
 
 
 def gups(g: CBCTGeometry, seconds: float) -> float:

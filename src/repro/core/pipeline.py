@@ -1,4 +1,4 @@
-"""Software-pipelined distributed FDK (paper §4.1.4, Fig. 4).
+"""Software-pipelined distributed FDK (paper §4.1.4, Fig. 4) — legacy API.
 
 The paper overlaps load/filter (CPU thread), AllGather (main thread) and
 back-projection (GPU thread) with circular buffers. The XLA-native
@@ -9,35 +9,26 @@ data-independent inside one scan step, so XLA's async collectives hide the
 communication behind the compute, exactly the paper's streaming benefit
 (their delta > 1 in Table 5).
 
-Over-decomposition of the projection axis (n_steps micro-batches per rank)
-is also the straggler-mitigation hook: the host loop can re-slice the
-batch->step mapping between scans without moving any state (DESIGN.md §7).
+Both builders here are deprecated-but-stable thin wrappers over the
+plan/engine layer (core/plan.py): the pipelined and chunked schedules are
+plan points of the same staged engine, so every capability (reduce modes,
+precision policies, tuned kernel blocks, single-device execution) is
+shared rather than forked. Construct a `ReconstructionPlan` directly for
+the full cross-product.
 """
 from __future__ import annotations
 
 from typing import Callable, Literal
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
-from .distributed import _proj_spec, output_spec, shift_pmats_i
-from .fdk import fdk_scale, _get_backprojector, BpImpl
-from .filtering import make_filter
-from .geometry import CBCTGeometry, projection_matrices
-from .precision import Precision, resolve_precision
+from .fdk import BpImpl
+from .geometry import CBCTGeometry
+from .plan import ReconstructionPlan, shift_pmats_j  # noqa: F401 (re-export)
+from .precision import Precision
 
 Array = jax.Array
-
-
-def shift_pmats_j(pmats: Array, j0) -> Array:
-    """Reparameterize P for a y-chunk starting at voxel index j0 (same trick
-    as distributed.shift_pmats_i, on the j column)."""
-    shift = pmats[..., :, 1] * j0
-    return pmats.at[..., :, 3].add(shift)
 
 
 def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
@@ -62,76 +53,17 @@ def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
     Output layout: (nx, y_chunks, ny/y_chunks, nz) with x sharded over
     `model` and dim 2 scattered over `data`; reshape(nx, ny, nz) restores
     the canonical volume (globally contiguous, see tests).
+
+    Deprecated-but-stable alias for
+    ``ReconstructionPlan(..., schedule="chunked", reduce="scatter")``; the
+    plan layer also offers chunked+psum (replicated slab), which this
+    wrapper predates.
     """
-    r = axis_size(mesh, AXIS_MODEL)
-    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
-    dp_in = axis_size(mesh, AXIS_DATA)
-    n_ranks = r * c
-    np_local = g.n_proj // n_ranks
-    yc = g.n_y // y_chunks
-    if g.n_proj % n_ranks or np_local % n_steps or g.n_y % y_chunks \
-            or yc % dp_in:
-        raise ValueError("shape does not tile over the mesh/chunks")
-    nb = np_local // n_steps
-    nx_slab = g.n_x // r
-    prec = resolve_precision(precision)
-    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
-    backproject = _get_backprojector(impl)
-    pmats_all = jnp.asarray(projection_matrices(g))
-    scale = fdk_scale(g)
-
-    def gather_batch(pm_b, raw_b):
-        q = filt(raw_b)
-        return (lax.all_gather(pm_b, AXIS_MODEL, axis=0, tiled=True),
-                lax.all_gather(q, AXIS_MODEL, axis=0, tiled=True))
-
-    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
-        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
-        pm_steps = pmats_local.reshape(n_steps, nb, 3, 4)
-        raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
-        buf = gather_batch(pm_steps[0], raw_steps[0])
-
-        def bp_chunks(acc, pm_col, q_col):
-            pm_slab = shift_pmats_i(pm_col, i0.astype(pm_col.dtype))
-
-            def one_chunk(ci, a):
-                pm_c = shift_pmats_j(pm_slab, (ci * yc).astype(pm_slab.dtype))
-                part = backproject(pm_c, q_col, nx_slab, yc, g.n_z)
-                part = lax.psum_scatter(part, AXIS_DATA,
-                                        scatter_dimension=1, tiled=True)
-                return lax.dynamic_update_index_in_dim(
-                    a, a[:, ci] + part, ci, axis=1
-                )
-
-            return lax.fori_loop(0, y_chunks, one_chunk, acc)
-
-        def step(carry, xs):
-            acc, prev = carry
-            nxt = gather_batch(*xs)                # comm for batch s
-            acc = bp_chunks(acc, *prev)            # compute for batch s-1
-            return (acc, nxt), None
-
-        init = jnp.zeros((nx_slab, y_chunks, yc // dp_in, g.n_z), jnp.float32)
-        (acc, last), _ = lax.scan(step, (init, buf),
-                                  (pm_steps[1:], raw_steps[1:]))
-        acc = bp_chunks(acc, *last)                # epilogue
-        if AXIS_POD in mesh.axis_names:
-            acc = lax.psum(acc, AXIS_POD)
-        return acc * scale
-
-    pspec = _proj_spec(mesh)
-    out_sp = P(AXIS_MODEL, None, AXIS_DATA, None)
-
-    @jax.jit
-    def reconstruct(projections: Array) -> Array:
-        return shard_map(
-            rank_fn, mesh=mesh,
-            in_specs=(pspec, pspec),
-            out_specs=out_sp,
-            check_vma=False,
-        )(pmats_all, projections)
-
-    return reconstruct
+    return ReconstructionPlan(
+        geometry=g, mesh=mesh, impl=impl, window=window,
+        schedule="chunked", n_steps=n_steps, y_chunks=y_chunks,
+        reduce="scatter", precision=precision,
+    ).build()
 
 
 def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
@@ -146,76 +78,12 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
     With a low-precision `precision` policy the per-step AllGather moves
     half-width bytes *and* overlaps with the previous batch's f32-accumulate
     back-projection — the two paper speedups compose.
+
+    Deprecated-but-stable alias for
+    ``ReconstructionPlan(..., schedule="pipelined").build()``.
     """
-    r = axis_size(mesh, AXIS_MODEL)
-    c = axis_size(mesh, AXIS_POD, AXIS_DATA)
-    n_ranks = r * c
-    np_local = g.n_proj // n_ranks
-    if g.n_proj % n_ranks or np_local % n_steps:
-        raise ValueError(
-            f"N_p={g.n_proj} must divide over {n_ranks} ranks x {n_steps} steps"
-        )
-    nb = np_local // n_steps          # local batch per pipeline step
-    nx_slab = g.n_x // r
-    dp = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
-    prec = resolve_precision(precision)
-    filt = make_filter(g, window, out_dtype=prec.storage_dtype)
-    backproject = _get_backprojector(impl)
-    pmats_all = jnp.asarray(projection_matrices(g))
-    scale = fdk_scale(g)
-
-    def gather_batch(pm_b, raw_b):
-        q = filt(raw_b)
-        q_col = lax.all_gather(q, AXIS_MODEL, axis=0, tiled=True)
-        pm_col = lax.all_gather(pm_b, AXIS_MODEL, axis=0, tiled=True)
-        return pm_col, q_col
-
-    def rank_fn(pmats_local: Array, proj_local: Array) -> Array:
-        i0 = lax.axis_index(AXIS_MODEL) * nx_slab
-        pm_steps = pmats_local.reshape(n_steps, nb, 3, 4)
-        raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
-
-        # Prologue: gather batch 0.
-        buf = gather_batch(pm_steps[0], raw_steps[0])
-
-        def step(carry, xs):
-            acc, (pm_prev, q_prev) = carry
-            pm_next, raw_next = xs
-            # Comm for batch s (independent of the BP below -> overlapped).
-            nxt = gather_batch(pm_next, raw_next)
-            # Compute for batch s-1.
-            pm_slab = shift_pmats_i(pm_prev, i0.astype(pm_prev.dtype))
-            acc = acc + backproject(pm_slab, q_prev, nx_slab, g.n_y, g.n_z)
-            return (acc, nxt), None
-
-        init = (jnp.zeros((nx_slab, g.n_y, g.n_z), jnp.float32), buf)
-        (acc, (pm_last, q_last)), _ = lax.scan(
-            step, init, (pm_steps[1:], raw_steps[1:])
-        )
-        # Epilogue: BP of the final gathered batch.
-        pm_slab = shift_pmats_i(pm_last, i0.astype(pm_last.dtype))
-        acc = acc + backproject(pm_slab, q_last, nx_slab, g.n_y, g.n_z)
-
-        if reduce == "scatter":
-            acc = lax.psum_scatter(acc, AXIS_DATA, scatter_dimension=1,
-                                   tiled=True)
-            if AXIS_POD in mesh.axis_names:
-                acc = lax.psum(acc, AXIS_POD)
-        else:
-            for a in dp:
-                acc = lax.psum(acc, a)
-        return acc * scale
-
-    pspec = _proj_spec(mesh)
-    out_sp = output_spec(mesh, reduce)
-
-    @jax.jit
-    def reconstruct(projections: Array) -> Array:
-        return shard_map(
-            rank_fn, mesh=mesh,
-            in_specs=(pspec, pspec),
-            out_specs=out_sp,
-            check_vma=False,
-        )(pmats_all, projections)
-
-    return reconstruct
+    return ReconstructionPlan(
+        geometry=g, mesh=mesh, impl=impl, window=window,
+        schedule="pipelined", n_steps=n_steps, reduce=reduce,
+        precision=precision,
+    ).build()

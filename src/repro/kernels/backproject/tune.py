@@ -21,14 +21,21 @@ Knobs:
   REPRO_BP_AUTOTUNE      "time" to measure survivors on every first use of
                          a geometry (default: model-ranked pick, no timing
                          — interpret-mode timing is python-speed).
+  REPRO_TUNE_CACHE       path of the file-backed tuning cache (JSON),
+                         keyed by the full tuning key (geometry tile,
+                         dtype, vmem budget, mode flags) so tuning
+                         survives across processes. Default
+                         ~/.cache/repro/bp_tune_cache.json; "off"/"0"/""
+                         disables persistence.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 import warnings
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,13 +63,80 @@ class BlockConfig:
 
 _CACHE: Dict[tuple, BlockConfig] = {}
 
+# --- file-backed persistence (tuning survives across processes) ------------
+
+_FILE_CACHE_VERSION = 1
+_FILE_HITS = 0  # keys served from disk this process (observability/tests)
+
 
 def clear_cache() -> None:
+    """Drop the in-process memo (the file cache, if any, is untouched)."""
     _CACHE.clear()
 
 
 def cache_info() -> Dict[tuple, BlockConfig]:
     return dict(_CACHE)
+
+
+def file_cache_hits() -> int:
+    """How many tuning keys this process served from the file cache."""
+    return _FILE_HITS
+
+
+def cache_path() -> Optional[str]:
+    """Resolved file-cache path, or None when persistence is disabled."""
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env is not None:
+        if env.strip().lower() in ("", "0", "off", "none"):
+            return None
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "bp_tune_cache.json")
+
+
+def _key_str(key: tuple) -> str:
+    return json.dumps(list(key))
+
+
+def _load_file_cache(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(data, dict) or data.get("version") != _FILE_CACHE_VERSION:
+        return {}  # stale schema: ignore, will be rewritten
+    entries = data.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def _file_cache_get(key: tuple) -> Optional[BlockConfig]:
+    path = cache_path()
+    if path is None:
+        return None
+    entry = _load_file_cache(path).get(_key_str(key))
+    if entry is None:
+        return None
+    try:
+        return BlockConfig(**entry)
+    except TypeError:
+        return None
+
+
+def _file_cache_put(key: tuple, cfg: BlockConfig) -> None:
+    path = cache_path()
+    if path is None:
+        return
+    entries = _load_file_cache(path)
+    entries[_key_str(key)] = dataclasses.asdict(cfg)
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": _FILE_CACHE_VERSION, "entries": entries}, f)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc.: persistence is best-effort
 
 
 def _divisors(n: int, cap: int) -> List[int]:
@@ -133,11 +207,14 @@ def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
              max_measure: int = 4, iters: int = 1,
              fix_bi: int | None = None, fix_bj: int | None = None,
              fix_bs: int | None = None, strict: bool = True) -> BlockConfig:
-    """Best block config for one (geometry, dtype), memoized in-process.
+    """Best block config for one (geometry, dtype), memoized in-process and
+    in the file-backed cache (REPRO_TUNE_CACHE) keyed by the tuning inputs.
 
     With measure=True the top-`max_measure` model-ranked survivors are each
     timed once with the real kernel on synthetic data of the true shape;
-    measure=False returns the model-ranked winner without running anything.
+    measure=False returns the model-ranked winner without running anything —
+    unless a measured winner for the same inputs is already cached, which is
+    always preferred (measured timings outrank the traffic model).
 
     strict=True raises when nothing fits the budget; strict=False falls
     back to the minimal-working-set tiling with a warning (a detector so
@@ -149,10 +226,25 @@ def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     qt_dtype = jnp.dtype(qt_dtype)
-    key = (nx, ny, nz, n_p, nu, nv, qt_dtype.str, budget, interpret, measure,
-           max_measure, iters, fix_bi, fix_bj, fix_bs, strict)
-    if key in _CACHE:
-        return _CACHE[key]
+    # The key is the tuning *problem*, not the tuning mode: a measured
+    # winner (elapsed > 0) satisfies both measured and model-ranked
+    # requests, so an expensive REPRO_BP_AUTOTUNE=time run is reused by
+    # later default-mode calls (in-process and via the file cache). An
+    # unmeasured entry only satisfies unmeasured requests — a measured
+    # request upgrades it in place.
+    key = (nx, ny, nz, n_p, nu, nv, qt_dtype.str, budget, interpret,
+           fix_bi, fix_bj, fix_bs, strict)
+    hit = _CACHE.get(key)
+    from_file = False
+    if hit is None:
+        hit = _file_cache_get(key)
+        from_file = hit is not None
+    if hit is not None and (not measure or hit.elapsed > 0.0):
+        if from_file:
+            global _FILE_HITS
+            _FILE_HITS += 1
+        _CACHE[key] = hit
+        return hit
 
     cands = candidate_blocks(nx, ny, n_p, nu, nv, nz // 2, qt_dtype, budget,
                              fix_bi, fix_bj, fix_bs)
@@ -176,6 +268,7 @@ def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
             f"proceeding with {best.as_tuple()} ({best.vmem} bytes)"
         )
         _CACHE[key] = best
+        _file_cache_put(key, best)
         return best
     ranked = sorted(cands, key=lambda c: _traffic_score(c, n_p),
                     reverse=True)
@@ -191,6 +284,7 @@ def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
     else:
         best = ranked[0]
     _CACHE[key] = best
+    _file_cache_put(key, best)
     return best
 
 

@@ -1,4 +1,5 @@
 import os
+import tempfile
 
 import jax
 import pytest
@@ -6,6 +7,15 @@ import pytest
 # NOTE: no XLA_FLAGS here — smoke tests must see the real (1-device) CPU.
 # Distributed tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.
+
+# Hermetic autotuner persistence: keep the file-backed tuning cache out of
+# ~/.cache during test runs (subprocess tests inherit this env, so
+# cross-process persistence still works within one session).
+os.environ.setdefault(
+    "REPRO_TUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-tune-"),
+                 "bp_tune_cache.json"),
+)
 
 jax.config.update("jax_enable_x64", False)
 

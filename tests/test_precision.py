@@ -205,3 +205,61 @@ class TestAutotuner:
                                  bi=4, bj=4, bs=4)
         scale = float(jnp.max(jnp.abs(oracle))) + 1e-12
         assert float(jnp.max(jnp.abs(out - oracle))) / scale < 1e-4
+
+
+class TestFileBackedCache:
+    """The tuner memo persists to a JSON file (REPRO_TUNE_CACHE) so tuning
+    survives across processes."""
+
+    def test_survives_in_process_memo_clear(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tc.json"))
+        tune.clear_cache()
+        hits0 = tune.file_cache_hits()
+        a = tune.autotune(16, 16, 16, 8, 24, 24, measure=False)
+        assert (tmp_path / "tc.json").exists()
+        tune.clear_cache()  # drop the memo; the file must refill it
+        b = tune.autotune(16, 16, 16, 8, 24, 24, measure=False)
+        assert tune.file_cache_hits() == hits0 + 1
+        assert b.as_tuple() == a.as_tuple()
+
+    def test_disabled_by_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_CACHE", "off")
+        assert tune.cache_path() is None
+        tune.clear_cache()
+        tune.autotune(16, 16, 16, 8, 24, 24, measure=False)
+        assert not list(tmp_path.iterdir())
+
+    def test_corrupt_cache_file_is_ignored(self, tmp_path, monkeypatch):
+        path = tmp_path / "tc.json"
+        path.write_text("{not json")
+        monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+        tune.clear_cache()
+        cfg = tune.autotune(16, 16, 16, 8, 24, 24, measure=False)
+        assert cfg.vmem <= tune.DEFAULT_VMEM_BUDGET  # recomputed fine
+
+    @pytest.mark.slow
+    def test_second_process_hits_cache(self, tmp_path):
+        """A second *process* serves the tuning key from the file cache."""
+        import os
+        import subprocess
+        import sys
+        script = (
+            "from repro.kernels.backproject import tune\n"
+            "cfg = tune.autotune(16, 16, 16, 8, 24, 24, measure=False)\n"
+            "print('OUT', cfg.as_tuple(), tune.file_cache_hits())\n"
+        )
+        env = dict(os.environ)
+        env["REPRO_TUNE_CACHE"] = str(tmp_path / "tc.json")
+        env["PYTHONPATH"] = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "src"))
+        outs = []
+        for _ in range(2):
+            r = subprocess.run([sys.executable, "-c", script], env=env,
+                               capture_output=True, text=True, timeout=300)
+            assert r.returncode == 0, r.stderr[-2000:]
+            outs.append([l for l in r.stdout.splitlines()
+                         if l.startswith("OUT")][0])
+        blocks1, hits1 = outs[0][4:].rsplit(" ", 1)
+        blocks2, hits2 = outs[1][4:].rsplit(" ", 1)
+        assert (hits1, hits2) == ("0", "1")  # second process: served from disk
+        assert blocks1 == blocks2
