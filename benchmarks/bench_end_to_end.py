@@ -15,7 +15,7 @@ from benchmarks.bench_backprojection import _time
 
 from repro.core.distributed import IFDKGrid
 from repro.core.fdk import gups
-from repro.core.geometry import CBCTGeometry, default_geometry
+from repro.core.geometry import default_geometry, paper_geometry
 from repro.core.perf_model import ABCI, gups_end_to_end, predict
 from repro.core.phantom import forward_project
 from repro.core.plan import plan_from_spec
@@ -42,11 +42,7 @@ def run(iters: int = 2, fast: bool = False, plan_spec: str | None = None):
             ))
     # projected (paper scale, paper constants)
     for n_out, r, c in [(2048, 4, 4), (4096, 32, 8), (8192, 256, 8)]:
-        g = CBCTGeometry(
-            n_proj=4096, n_u=2048, n_v=2048, d_u=0.002, d_v=0.002,
-            d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
-            d_x=0.001, d_y=0.001, d_z=0.001,
-        )
+        g = paper_geometry(n_out)
         b = predict(g, IFDKGrid(r=r, c=c), ABCI)
         rows.append((
             f"fig6/projected/{n_out}^3/{r * c}gpus", b.t_runtime * 1e6,

@@ -9,7 +9,7 @@ problems onto the TPU v5e target constants.
 from __future__ import annotations
 
 from repro.core.distributed import IFDKGrid
-from repro.core.geometry import CBCTGeometry
+from repro.core.geometry import CBCTGeometry, paper_geometry
 from repro.core.perf_model import ABCI, TPU_V5E, gups_end_to_end, predict
 
 # Paper Table 5: (volume, N_gpus) -> measured T_compute seconds
@@ -26,11 +26,7 @@ TABLE5 = {
 
 
 def _problem(n_out: int) -> CBCTGeometry:
-    return CBCTGeometry(
-        n_proj=4096, n_u=2048, n_v=2048, d_u=0.002, d_v=0.002,
-        d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
-        d_x=0.001, d_y=0.001, d_z=0.001,
-    )
+    return paper_geometry(n_out)
 
 
 def run(iters: int = 0, fast: bool = False):

@@ -1,0 +1,129 @@
+"""Ranked plan-search table: the planner's answer for a deployment triple.
+
+Prints the top-k candidate plans for a (geometry, device count, HBM budget)
+with the full plan-aware Eq. 17-19 breakdown per row — the table the paper
+builds by hand in §4.2/Table 5, produced by `repro.planner.search_grids`.
+
+    PYTHONPATH=src python benchmarks/plan_search.py                # paper 4K, 256 ranks
+    PYTHONPATH=src python benchmarks/plan_search.py --n 2048 --devices 64 \
+        --hbm-gib 16 --system abci --top-k 12 --all
+    PYTHONPATH=src python benchmarks/plan_search.py --local --measure
+        # buildable single-device plans, top-3 timed for real
+
+Also runnable as a `benchmarks/run.py` suite (``--suite plan_search``).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.geometry import default_geometry, paper_geometry
+from repro.core.perf_model import ABCI, TPU_V5E
+from repro.planner import search_grids, search_plans
+from repro.planner.measure import refine
+
+_SYSTEMS = {"abci": ABCI, "tpu": TPU_V5E}
+
+
+def _fmt_row(i, p, g):
+    b = p.breakdown
+    pt = p.point
+    sched = pt.schedule
+    if sched != "fused":
+        sched += f"/{pt.n_steps}"
+    if pt.y_chunks:
+        sched += f"x{pt.y_chunks}"
+    stat = "ok" if p.feasible else f"INFEASIBLE ({p.reason})"
+    cols = [
+        f"{i:>2}", f"{pt.grid.r}x{pt.grid.c}", f"{sched:<14}",
+        f"{pt.reduce:<7}", f"{pt.precision:<4}", f"{pt.impl:<10}",
+        f"{b.t_load:7.2f}", f"{b.t_flt:7.2f}", f"{b.t_allgather:7.2f}",
+        f"{b.t_bp:7.2f}", f"{b.t_compute:7.2f}", f"{b.t_post:7.2f}",
+        f"{b.t_runtime:8.2f}",
+        f"{p.predicted_gups(g):9.1f}",
+        f"{p.footprint.total / 2**30:6.2f}",
+    ]
+    if p.measured is not None:
+        cols.append(f"meas={p.measured:.3f}s")
+    cols.append(stat)
+    return "  ".join(cols)
+
+
+_HEADER = ("  #  RxC    schedule        reduce   prec  impl         t_load"
+           "   t_flt    t_ag     t_bp   t_cmp   t_post     t_run      GUPS"
+           "    GiB  status")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="perf-model-driven ReconstructionPlan search")
+    ap.add_argument("--n", type=int, default=4096, help="volume edge N_x=N_y=N_z")
+    ap.add_argument("--n-proj", type=int, default=4096)
+    ap.add_argument("--detector", type=int, default=2048,
+                    help="detector edge N_u=N_v")
+    ap.add_argument("--devices", type=int, default=256,
+                    help="deployment size to plan for (rank count)")
+    ap.add_argument("--system", choices=sorted(_SYSTEMS), default="abci")
+    ap.add_argument("--hbm-gib", type=float, default=16.0,
+                    help="per-device HBM budget")
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--all", action="store_true",
+                    help="include infeasible candidates in the table")
+    ap.add_argument("--local", action="store_true",
+                    help="search buildable single-device plans (small "
+                         "default geometry, mesh-less 1x1 grid) instead of "
+                         "a paper-scale projection")
+    ap.add_argument("--measure", action="store_true",
+                    help="with --local: time the top-3 built engines and "
+                         "re-rank by wall clock")
+    args = ap.parse_args(argv)
+    if args.measure and not args.local:
+        ap.error("--measure times built engines and needs --local "
+                 "(grid-only projections have nothing to build)")
+
+    system = _SYSTEMS[args.system]
+    hbm = int(args.hbm_gib * 2**30)
+    if args.local:
+        g = default_geometry(32, n_proj=64)
+        proposals = search_plans(
+            g, None, system=system, hbm_bytes=hbm, top_k=args.top_k,
+            include_infeasible=args.all)
+        if args.measure:
+            proposals = refine(g, proposals)
+    else:
+        g = paper_geometry(args.n, args.n_proj, args.detector)
+        proposals = search_grids(
+            g, args.devices, system=system, hbm_bytes=hbm,
+            top_k=args.top_k, include_infeasible=args.all)
+
+    print(f"plan search: {g.n_u}x{g.n_v} x {g.n_proj} proj -> {g.n_x}^3, "
+          f"{args.devices if not args.local else 'local'} ranks, "
+          f"{args.hbm_gib} GiB HBM, system={system.name} "
+          f"(times in seconds)")
+    print(_HEADER)
+    for i, p in enumerate(proposals):
+        print(_fmt_row(i, p, g))
+
+
+def run(iters: int = 1, fast: bool = False):
+    """benchmarks/run.py suite: top-5 modeled plans as CSV rows."""
+    if fast:
+        g = default_geometry(32, n_proj=64)
+        devices = 4
+    else:
+        g = paper_geometry()
+        devices = 256
+    rows = []
+    proposals = search_grids(g, devices, system=ABCI, top_k=5)
+    for i, p in enumerate(proposals):
+        grid = p.point.grid
+        rows.append((
+            f"plan_search/top{i}/{grid.r}x{grid.c}",
+            p.predicted * 1e6,
+            f"{p.predicted_gups(g):.1f}GUPS "
+            + p.spec().replace(",", ";"),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

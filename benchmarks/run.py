@@ -14,14 +14,20 @@
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; the suites import each other as `benchmarks.*`, so make the
+# documented invocation work from anywhere.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main(argv=None) -> None:
     from benchmarks import (
         bench_backprojection, bench_end_to_end, bench_filtering,
-        bench_scaling_model, roofline_table,
+        bench_scaling_model, plan_search, roofline_table,
     )
     suites = [
         ("table4", bench_backprojection.run),     # BP kernel GUPS sweep
@@ -29,6 +35,7 @@ def main(argv=None) -> None:
         ("table5_fig5", bench_scaling_model.run),  # scaling model vs paper
         ("fig6", bench_end_to_end.run),           # end-to-end GUPS
         ("roofline", roofline_table.run),         # dry-run roofline terms
+        ("plan_search", plan_search.run),         # auto-planner ranked table
     ]
     names = [n for n, _ in suites]
     ap = argparse.ArgumentParser(description="iFDK benchmark driver")
@@ -40,7 +47,9 @@ def main(argv=None) -> None:
                     help="timing iterations (default: per-suite)")
     ap.add_argument("--plan", default=None, metavar="SPEC",
                     help="ReconstructionPlan spec for the end-to-end suite, "
-                         "e.g. 'schedule=pipelined,n_steps=2,precision=bf16'")
+                         "e.g. 'schedule=pipelined,n_steps=2,precision=bf16'"
+                         " — or 'auto' to let the planner pick "
+                         "(repro/planner)")
     args = ap.parse_args(argv)
 
     selected = [s for s in suites if not args.suite or s[0] in args.suite]

@@ -19,11 +19,12 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.core.distributed import input_sharding
-from repro.core.fdk import fdk_scale, gups, reconstruct
+from repro.core.fdk import fdk_scale, gups
 from repro.core.geometry import default_geometry
 from repro.core.phantom import forward_project
-from repro.core.plan import ReconstructionPlan
+from repro.core.plan import ReconstructionPlan, plan_from_spec
 from repro.parallel.mesh import make_mesh
+from repro.planner import search_plans
 from repro.runtime import ResumableReconstruction, StragglerMonitor
 
 
@@ -34,16 +35,19 @@ def main():
           f"{g.n_u}^2 x {g.n_proj} -> {g.n_x}^3")
 
     proj = forward_project(g)
-    # The chunked schedule with per-chunk reduce-scatter: minimal live slab
-    # state, output left sharded for the parallel store (paper Fig. 4
-    # streaming applied to the output side).
-    plan = ReconstructionPlan(geometry=g, mesh=mesh, schedule="chunked",
-                              n_steps=2, y_chunks=4, reduce="scatter")
-    print(f"plan: {plan.describe()}")
+    # Auto-planning: the planner (repro/planner) prices the schedule x
+    # reduce x precision cross-product with the paper's Eq. 8-19 model,
+    # prunes what cannot fit in HBM, and hands back the best feasible plan.
+    for i, p in enumerate(search_plans(g, mesh, top_k=3)):
+        print(f"  candidate {i}: {p.spec()}  "
+              f"t_run={p.breakdown.t_runtime:.3f}s  "
+              f"footprint={p.footprint.total / 2**20:.0f}MiB")
+    plan = plan_from_spec(g, "auto,precision=fp32", mesh=mesh)
+    print(f"auto plan: {plan.describe()}")
     fn = plan.build()
     out = fn(jax.device_put(proj, input_sharding(mesh)))
     vol = np.array(out).reshape(g.n_x, g.n_y, g.n_z)
-    ref = np.array(reconstruct(g, proj))
+    ref = np.array(ReconstructionPlan(geometry=g).build()(proj))
     print(f"distributed vs single-device max err: "
           f"{np.max(np.abs(vol - ref)):.2e}")
 

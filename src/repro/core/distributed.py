@@ -81,6 +81,22 @@ def choose_grid(g: CBCTGeometry, n_devices: int,
     return IFDKGrid(r=r, c=n_devices // r)
 
 
+def grid_candidates(g: CBCTGeometry, n_devices: int) -> list[IFDKGrid]:
+    """Every rectangular R x C factorization of `n_devices` the pipeline can
+    actually run: R must tile the volume (R | N_x) and the ranks must tile
+    the projections (R*C | N_p) — the divisibility half of §4.1.5, with the
+    memory half left to the caller (the planner's feasibility model, or
+    `choose_grid`'s sub-volume bound). Ordered by ascending R (the paper's
+    preference: slabs as large as possible, C maximal). Empty when no
+    factorization works — including when the ranks cannot tile the
+    projections at all."""
+    if g.n_proj % n_devices:
+        return []
+    return [IFDKGrid(r=r, c=n_devices // r)
+            for r in range(1, n_devices + 1)
+            if n_devices % r == 0 and g.n_x % r == 0]
+
+
 def shift_pmats_i(pmats: Array, i0: Array) -> Array:
     """Reparameterize P for a volume slab starting at voxel index i0:
     P . [i + i0, j, k, 1]^T == P' . [i, j, k, 1]^T with
@@ -129,6 +145,10 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
     Deprecated-but-stable alias: a thin wrapper over
     ``ReconstructionPlan(..., schedule="fused").build()`` (core/plan.py).
     """
+    from .fdk import warn_deprecated_once
+    warn_deprecated_once(
+        "make_distributed_fdk",
+        'ReconstructionPlan(..., schedule="fused").build()')
     from .plan import ReconstructionPlan
     return ReconstructionPlan(
         geometry=g, mesh=mesh, impl=impl, window=window,

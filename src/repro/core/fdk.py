@@ -8,6 +8,7 @@ same engine at other plan points.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Callable, Literal
 
 import jax
@@ -19,6 +20,20 @@ from .precision import Precision
 Array = jax.Array
 
 BpImpl = Literal["reference", "factorized", "kernel"]
+
+# Legacy entry points warn ONCE per process (per entry point) — enough to
+# steer callers at the plan layer without spamming per-call loops.
+_DEPRECATION_FIRED: set = set()
+
+
+def warn_deprecated_once(name: str, alternative: str) -> None:
+    if name in _DEPRECATION_FIRED:
+        return
+    _DEPRECATION_FIRED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; construct a ReconstructionPlan "
+        f"(core/plan.py) instead — equivalent: {alternative}",
+        DeprecationWarning, stacklevel=3)
 
 
 def fdk_scale(g: CBCTGeometry) -> float:
@@ -61,6 +76,9 @@ def reconstruct(g: CBCTGeometry, projections: Array,
     it and accumulates f32. "fp32" (default) preserves the historical exact
     behaviour; None picks the backend default (bf16 on CPU/TPU).
     """
+    warn_deprecated_once(
+        "fdk.reconstruct",
+        "ReconstructionPlan(geometry=g, ...).build()(projections)")
     from .plan import ReconstructionPlan
     plan = ReconstructionPlan(geometry=g, impl=impl, window=window,
                               precision=precision)
@@ -77,11 +95,14 @@ def timed_reconstruct(g: CBCTGeometry, projections: Array,
                       impl: BpImpl = "factorized", iters: int = 3,
                       precision: Precision | str | None = "fp32"):
     """Benchmark helper returning (volume, seconds_per_run, gups)."""
-    vol = reconstruct(g, projections, impl, precision=precision)  # warm-up
+    from .plan import ReconstructionPlan
+    fn = ReconstructionPlan(geometry=g, impl=impl,
+                            precision=precision).build()
+    vol = fn(projections)  # warm-up
     jax.block_until_ready(vol)
     t0 = time.perf_counter()
     for _ in range(iters):
-        vol = reconstruct(g, projections, impl, precision=precision)
+        vol = fn(projections)
         jax.block_until_ready(vol)
     dt = (time.perf_counter() - t0) / iters
     return vol, dt, gups(g, dt)

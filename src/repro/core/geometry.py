@@ -98,6 +98,19 @@ def default_geometry(n: int = 64, n_proj: int | None = None) -> CBCTGeometry:
     )
 
 
+def paper_geometry(n_out: int = 4096, n_proj: int = 4096,
+                   detector: int = 2048) -> CBCTGeometry:
+    """The paper's benchmark problem (§5, Table 1): a 2048^2 x 4096
+    projection set reconstructing an N^3 volume — the single source of the
+    constants shared by the scaling-model/end-to-end/plan-search benchmarks
+    and the perf-model regression tests."""
+    return CBCTGeometry(
+        n_proj=n_proj, n_u=detector, n_v=detector, d_u=0.002, d_v=0.002,
+        d=4.0, dsd=8.0, n_x=n_out, n_y=n_out, n_z=n_out,
+        d_x=0.001, d_y=0.001, d_z=0.001,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Projection matrices (Eq. 2)
 # ---------------------------------------------------------------------------

@@ -70,10 +70,16 @@ class PerfBreakdown:
     t_d2h: float
     t_reduce: float
     t_store: float
+    # Eq. 17 assumes the paper's software pipeline: load/filter/AllGather/BP
+    # overlap, so T_compute is the max of the stage times. A non-pipelined
+    # (fused) schedule serializes the stages instead — overlap=False makes
+    # t_compute their sum (the planner's schedule-aware cost, planner/cost.py).
+    overlap: bool = True
 
     @property
     def t_compute(self) -> float:                      # Eq. 17
-        return max(self.t_load, self.t_flt, self.t_allgather, self.t_bp)
+        stages = (self.t_load, self.t_flt, self.t_allgather, self.t_bp)
+        return max(stages) if self.overlap else sum(stages)
 
     @property
     def t_post(self) -> float:                         # Eq. 18 (T_trans ~ 0)
@@ -92,19 +98,29 @@ class PerfBreakdown:
 
 
 def predict(g: CBCTGeometry, grid: IFDKGrid,
-            sys: SystemConstants = ABCI) -> PerfBreakdown:
-    """Eqs. 8-16 verbatim (float32 data)."""
+            sys: SystemConstants = ABCI,
+            storage_bytes: float = 4.0) -> PerfBreakdown:
+    """Eqs. 8-16 (float32 volume; projection-stream width `storage_bytes`).
+
+    `storage_bytes` is the itemsize the projection stream is stored and
+    communicated in (core/precision.py): it scales the load, AllGather and
+    H2D terms — the paper's FP16-texture halving of the dominant
+    communication time. The default 4.0 reproduces the paper's f32 numbers
+    verbatim. The volume side (BP accumulate, Reduce, store) stays f32.
+    """
     szf = 4.0
+    sp = float(storage_bytes)
     r, c = grid.r, grid.c
     n_ranks = grid.n_ranks
     n_nodes = max(1, n_ranks // sys.devices_per_node)
-    proj_bytes = szf * g.n_u * g.n_v * g.n_proj
+    proj_bytes = sp * g.n_u * g.n_v * g.n_proj
     vol_bytes = szf * g.n_x * g.n_y * g.n_z
 
     t_load = proj_bytes / sys.bw_load                                   # Eq. 8
     t_flt = g.n_proj / (n_nodes * sys.th_flt)                           # Eq. 9
-    t_allgather = g.n_proj / (c * r * sys.th_allgather)                 # Eq.10
-    t_h2d = (szf * sys.devices_per_node * g.n_u * g.n_v * g.n_proj
+    t_allgather = (g.n_proj * (sp / szf)
+                   / (c * r * sys.th_allgather))                        # Eq.10
+    t_h2d = (sp * sys.devices_per_node * g.n_u * g.n_v * g.n_proj
              / (c * sys.bw_hd * sys.n_hd_links))                        # Eq.11
     updates = g.n_x * g.n_y * g.n_z / r * (g.n_proj / c)
     t_bp = t_h2d + updates / (sys.gups_bp * 2**30)                      # Eq.12

@@ -23,7 +23,7 @@ from typing import Callable, Literal
 import jax
 from jax.sharding import Mesh
 
-from .fdk import BpImpl
+from .fdk import BpImpl, warn_deprecated_once
 from .geometry import CBCTGeometry
 from .plan import ReconstructionPlan, shift_pmats_j  # noqa: F401 (re-export)
 from .precision import Precision
@@ -59,6 +59,10 @@ def make_chunked_fdk(mesh: Mesh, g: CBCTGeometry,
     plan layer also offers chunked+psum (replicated slab), which this
     wrapper predates.
     """
+    warn_deprecated_once(
+        "make_chunked_fdk",
+        'ReconstructionPlan(..., schedule="chunked", reduce="scatter")'
+        '.build()')
     return ReconstructionPlan(
         geometry=g, mesh=mesh, impl=impl, window=window,
         schedule="chunked", n_steps=n_steps, y_chunks=y_chunks,
@@ -82,6 +86,9 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
     Deprecated-but-stable alias for
     ``ReconstructionPlan(..., schedule="pipelined").build()``.
     """
+    warn_deprecated_once(
+        "make_pipelined_fdk",
+        'ReconstructionPlan(..., schedule="pipelined").build()')
     return ReconstructionPlan(
         geometry=g, mesh=mesh, impl=impl, window=window,
         schedule="pipelined", n_steps=n_steps, reduce=reduce,

@@ -71,6 +71,20 @@ def clear_engine_cache() -> None:
     _ENGINE_CACHE.clear()
 
 
+def bp_call_shape(g: CBCTGeometry, r: int, c: int, schedule: str,
+                  n_steps: int, y_chunks: Optional[int]
+                  ) -> Tuple[int, int, int]:
+    """(nx, ny, n_p) of ONE back-projection call under a plan point: the
+    x-slab (and y-chunk, if chunked) of one gathered micro-batch. The one
+    formula shared by the engine's block resolution and the planner's
+    kernel-VMEM feasibility check (planner/feasibility.py)."""
+    nx_call = g.n_x // r
+    ny_call = (g.n_y // y_chunks if schedule == "chunked" and y_chunks
+               else g.n_y)
+    np_call = g.n_proj // (c * n_steps)
+    return nx_call, ny_call, np_call
+
+
 def shift_pmats_j(pmats: Array, j0) -> Array:
     """Reparameterize P for a y-chunk starting at voxel index j0 (same trick
     as distributed.shift_pmats_i, on the j column)."""
@@ -230,15 +244,9 @@ class ReconstructionPlan:
     # -- kernel block resolution (plan-time, not per-call) ------------------
 
     def _bp_call_shape(self) -> Tuple[int, int, int]:
-        """(nx, ny, n_p) of ONE back-projection call under this plan: the
-        x-slab (and y-chunk, if chunked) of one gathered micro-batch."""
-        g = self.geometry
         grid = self.grid
-        nx_call = g.n_x // grid.r
-        ny_call = (g.n_y // self.y_chunks if self.schedule == "chunked"
-                   else g.n_y)
-        np_call = g.n_proj // (grid.c * self.n_steps)
-        return nx_call, ny_call, np_call
+        return bp_call_shape(self.geometry, grid.r, grid.c, self.schedule,
+                             self.n_steps, self.y_chunks)
 
     def resolved_blocks(self) -> Optional[Tuple[int, int, int]]:
         """The (bi, bj, bs) Pallas tile this plan will run with — explicit
@@ -470,6 +478,36 @@ class ReconstructionPlan:
         return reconstruct_fn
 
 
+_SPEC_INT_KEYS = ("n_steps", "y_chunks", "vmem_budget")
+_SPEC_STR_KEYS = ("impl", "window", "precision", "schedule", "reduce")
+_SPEC_KEYS = _SPEC_STR_KEYS + _SPEC_INT_KEYS + ("blocks",)
+
+# Known *values*, mapped to the key they belong to — so a bare typo like
+# "pipelned" can be answered with "did you mean 'schedule=pipelined'?".
+_SPEC_VALUE_KEYS = {
+    **{v: "schedule" for v in _SCHEDULES},
+    **{v: "reduce" for v in _REDUCES},
+    **{v: "impl" for v in _IMPLS},
+    **{v: "precision" for v in ("fp32", "bf16", "fp16")},
+    **{v: "window" for v in _WINDOWS},
+}
+
+
+def _spec_hint(token: str) -> str:
+    """'; did you mean ...?' for the nearest valid spec token, or ''."""
+    import difflib
+    candidates = ["auto"] + list(_SPEC_KEYS) + list(_SPEC_VALUE_KEYS)
+    close = difflib.get_close_matches(token, candidates, n=1, cutoff=0.6)
+    if not close:
+        return ""
+    match = close[0]
+    if match in _SPEC_VALUE_KEYS:
+        match = f"{_SPEC_VALUE_KEYS[match]}={match}"
+    elif match in _SPEC_KEYS:
+        match = f"{match}=..."
+    return f"; did you mean {match!r}?"
+
+
 def plan_from_spec(geometry: CBCTGeometry, spec: str = "",
                    mesh: Mesh | None = None, **overrides) -> ReconstructionPlan:
     """Build a plan from a compact ``key=value,key=value`` spec string — the
@@ -479,19 +517,38 @@ def plan_from_spec(geometry: CBCTGeometry, spec: str = "",
     Recognized keys: impl, window, precision, schedule, n_steps, y_chunks,
     reduce, vmem_budget, blocks (as ``bi:bj:bs``). ``overrides`` kwargs win
     over the spec string.
+
+    The bare token ``auto`` hands the remaining (pinned) dimensions to the
+    planner (repro/planner): ``"auto"`` searches the whole space for the
+    best feasible plan on this (geometry, mesh); ``"auto,precision=bf16"``
+    searches with the precision axis pinned.
     """
     kwargs: dict = {}
+    auto = False
     for item in filter(None, (s.strip() for s in spec.split(","))):
         if "=" not in item:
-            raise ValueError(f"plan spec item {item!r} is not key=value")
+            if item == "auto":
+                auto = True
+                continue
+            raise ValueError(
+                f"plan spec token {item!r} is not key=value and not 'auto'; "
+                f"valid keys: {', '.join(_SPEC_KEYS)}{_spec_hint(item)}")
         key, val = (s.strip() for s in item.split("=", 1))
-        if key in ("n_steps", "y_chunks", "vmem_budget"):
+        if key in _SPEC_INT_KEYS:
             kwargs[key] = int(val)
         elif key == "blocks":
             kwargs[key] = tuple(int(v) for v in val.split(":"))
-        elif key in ("impl", "window", "precision", "schedule", "reduce"):
+        elif key in _SPEC_STR_KEYS:
             kwargs[key] = val
         else:
-            raise ValueError(f"unknown plan spec key {key!r}")
+            raise ValueError(
+                f"unknown plan spec key {key!r}; valid keys: "
+                f"{', '.join(_SPEC_KEYS)}{_spec_hint(key)}")
     kwargs.update(overrides)
+    if auto:
+        from repro.planner import auto_plan
+        window = kwargs.pop("window", "ramlak")
+        vmem_budget = kwargs.pop("vmem_budget", None)
+        return auto_plan(geometry, mesh=mesh, window=window,
+                         vmem_budget=vmem_budget, **kwargs)
     return ReconstructionPlan(geometry=geometry, mesh=mesh, **kwargs)

@@ -31,7 +31,7 @@ Knobs:
 from __future__ import annotations
 
 import dataclasses
-import json
+import functools
 import os
 import time
 import warnings
@@ -40,6 +40,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.filecache import JsonFileCache
 
 from .kernel import backproject_dual_pallas, vmem_bytes
 
@@ -63,10 +65,9 @@ class BlockConfig:
 
 _CACHE: Dict[tuple, BlockConfig] = {}
 
-# --- file-backed persistence (tuning survives across processes) ------------
-
-_FILE_CACHE_VERSION = 1
-_FILE_HITS = 0  # keys served from disk this process (observability/tests)
+# File-backed persistence (tuning survives across processes): shared
+# machinery with the planner's measurement cache (repro/filecache.py).
+_FILE_CACHE = JsonFileCache("REPRO_TUNE_CACHE", "bp_tune_cache.json")
 
 
 def clear_cache() -> None:
@@ -80,41 +81,16 @@ def cache_info() -> Dict[tuple, BlockConfig]:
 
 def file_cache_hits() -> int:
     """How many tuning keys this process served from the file cache."""
-    return _FILE_HITS
+    return _FILE_CACHE.hits
 
 
 def cache_path() -> Optional[str]:
     """Resolved file-cache path, or None when persistence is disabled."""
-    env = os.environ.get("REPRO_TUNE_CACHE")
-    if env is not None:
-        if env.strip().lower() in ("", "0", "off", "none"):
-            return None
-        return env
-    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "bp_tune_cache.json")
-
-
-def _key_str(key: tuple) -> str:
-    return json.dumps(list(key))
-
-
-def _load_file_cache(path: str) -> dict:
-    try:
-        with open(path) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        return {}
-    if not isinstance(data, dict) or data.get("version") != _FILE_CACHE_VERSION:
-        return {}  # stale schema: ignore, will be rewritten
-    entries = data.get("entries")
-    return entries if isinstance(entries, dict) else {}
+    return _FILE_CACHE.path()
 
 
 def _file_cache_get(key: tuple) -> Optional[BlockConfig]:
-    path = cache_path()
-    if path is None:
-        return None
-    entry = _load_file_cache(path).get(_key_str(key))
+    entry = _FILE_CACHE.get(key)
     if entry is None:
         return None
     try:
@@ -124,19 +100,7 @@ def _file_cache_get(key: tuple) -> Optional[BlockConfig]:
 
 
 def _file_cache_put(key: tuple, cfg: BlockConfig) -> None:
-    path = cache_path()
-    if path is None:
-        return
-    entries = _load_file_cache(path)
-    entries[_key_str(key)] = dataclasses.asdict(cfg)
-    try:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump({"version": _FILE_CACHE_VERSION, "entries": entries}, f)
-        os.replace(tmp, path)
-    except OSError:
-        pass  # read-only FS etc.: persistence is best-effort
+    _FILE_CACHE.put(key, dataclasses.asdict(cfg))
 
 
 def _divisors(n: int, cap: int) -> List[int]:
@@ -172,6 +136,19 @@ def candidate_blocks(nx: int, ny: int, n_p: int, nu: int, nv: int, nzh: int,
                 if vm <= budget:
                     out.append(BlockConfig(bi, bj, bs, vm))
     return out
+
+
+@functools.lru_cache(maxsize=None)
+def min_vmem_bytes(nx: int, ny: int, n_p: int, nu: int, nv: int, nzh: int,
+                   qt_dtype=jnp.float32) -> int:
+    """Smallest achievable working set over all candidate tilings — the
+    kernel-level feasibility floor (planner/feasibility.py): if even this
+    exceeds the VMEM budget, no block choice can make the kernel fit.
+    Memoized: the planner asks for the same per-call shape once per
+    (reduce, precision-of-equal-width, grid) candidate."""
+    cands = candidate_blocks(nx, ny, n_p, nu, nv, nzh, qt_dtype,
+                             budget=2**62)
+    return min(c.vmem for c in cands)
 
 
 def _traffic_score(c: BlockConfig, n_p: int) -> tuple:
@@ -241,8 +218,7 @@ def autotune(nx: int, ny: int, nz: int, n_p: int, nu: int, nv: int,
         from_file = hit is not None
     if hit is not None and (not measure or hit.elapsed > 0.0):
         if from_file:
-            global _FILE_HITS
-            _FILE_HITS += 1
+            _FILE_CACHE.hits += 1
         _CACHE[key] = hit
         return hit
 

@@ -143,8 +143,7 @@ def run_fdk(multi_pod: bool, problem: str = "4k", out_file=None,
     """The paper's own cells: 2048^2 x 4096 -> {2k,4k,8k}^3 reconstruction."""
     import jax.numpy as jnp
     from repro.core.geometry import CBCTGeometry
-    from repro.core.distributed import make_distributed_fdk, input_sharding
-    from repro.core.pipeline import make_chunked_fdk, make_pipelined_fdk
+    from repro.core.plan import ReconstructionPlan
 
     n = {"2k": 2048, "4k": 4096, "8k": 8192}[problem]
     g = CBCTGeometry(
@@ -156,12 +155,17 @@ def run_fdk(multi_pod: bool, problem: str = "4k", out_file=None,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     if fdk_impl == "chunked":
-        fn = make_chunked_fdk(mesh, g, n_steps=n_steps, y_chunks=y_chunks,
-                              impl=impl)
+        plan = ReconstructionPlan(geometry=g, mesh=mesh, impl=impl,
+                                  schedule="chunked", n_steps=n_steps,
+                                  y_chunks=y_chunks, reduce="scatter")
     elif fdk_impl == "pipelined":
-        fn = make_pipelined_fdk(mesh, g, n_steps=n_steps, impl=impl)
+        plan = ReconstructionPlan(geometry=g, mesh=mesh, impl=impl,
+                                  schedule="pipelined", n_steps=n_steps,
+                                  reduce="scatter")
     else:
-        fn = make_distributed_fdk(mesh, g, impl=impl)
+        plan = ReconstructionPlan(geometry=g, mesh=mesh, impl=impl,
+                                  schedule="fused", reduce="scatter")
+    fn = plan.build()
     proj = jax.ShapeDtypeStruct((g.n_proj, g.n_v, g.n_u), jnp.float32)
     lowered = fn.lower(proj) if hasattr(fn, "lower") else jax.jit(
         fn

@@ -1,0 +1,157 @@
+"""Plan-aware cost model: Eqs. 8-19 specialized to a plan point.
+
+`core/perf_model.predict` is the paper's model verbatim — f32 data, the
+pipelined overlap of Eq. 17 baked in. A `ReconstructionPlan` moves every one
+of those assumptions into a knob, so the planner's cost function re-derives
+the terms per plan point:
+
+  storage dtype   load/AllGather/H2D bytes scale with the precision policy's
+                  storage itemsize (perf_model's `storage_bytes`).
+  schedule        fused      — no overlap: T_compute is the SUM of the stage
+                               times (one gather, one back-projection, no
+                               Fig. 4 pipeline to hide anything behind);
+                  pipelined  — Eq. 17 verbatim: T_compute = max(stages),
+                               plus a per-micro-batch launch overhead so the
+                               model does not ask for n_steps -> infinity;
+                  chunked    — pipelined, plus the back-projection re-streams
+                               the gathered projection batch once per y-chunk
+                               (the Q^T tile is re-read for every output
+                               chunk), an HBM-traffic term on T_bp.
+  reduce          psum (allreduce) moves ~2x the bytes of psum_scatter per
+                  rank (2(C-1)/C vs (C-1)/C ring traffic) — the volume
+                  Reduce term sees the mode.
+  impl            relative back-projection throughput factors: the reference
+                  projects full (u, v, w) coordinates per voxel (~8x the
+                  factorized work, Alg. 2 vs Alg. 4); the Pallas kernel's
+                  dual-slab streaming buys a modest margin over the
+                  factorized einsum path.
+
+All constants still come from `SystemConstants`; this module only decides
+how the plan combines them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.distributed import IFDKGrid
+from repro.core.geometry import CBCTGeometry
+from repro.core.perf_model import (
+    ABCI, PerfBreakdown, SystemConstants, predict,
+)
+from repro.core.precision import resolve_precision
+
+# Back-projection throughput relative to `gups_bp` (measured for the
+# factorized path). Ratios follow the repo's own roofline notes (Alg. 2
+# recomputes the full projection per voxel; the dual-slab kernel halves the
+# k-loop via Theorem 1) — they order the impls, they are not measurements.
+IMPL_GUPS_FACTOR = {
+    "reference": 0.125,
+    "factorized": 1.0,
+    "kernel": 1.25,
+}
+
+# Fixed cost per pipeline micro-batch (collective launch + scan-step
+# overhead). Keeps the modeled optimum at a finite n_steps.
+STEP_OVERHEAD_S = 2e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanPoint:
+    """The planner's search coordinates: every plan knob the cost model and
+    the feasibility model read, plus the rank grid it would run on.
+
+    Decoupled from `ReconstructionPlan` so the planner can cost hypothetical
+    deployments (a 2048-device grid) without building a mesh; `search.py`
+    attaches a real plan when the mesh exists.
+
+    `data_size` is the extent of the mesh's `data` axis — the axis
+    reduce="scatter" actually shards over (the engine leaves the pod axis
+    replicated). None means "unknown mesh": the feasibility model then
+    assumes all C columns scatter, the single-pod case.
+    """
+
+    grid: IFDKGrid
+    schedule: str = "fused"
+    n_steps: int = 1
+    y_chunks: int | None = None
+    reduce: str = "psum"
+    precision: str = "fp32"
+    impl: str = "factorized"
+    data_size: int | None = None
+
+    def spec(self) -> str:
+        """The `plan_from_spec` string reproducing this point."""
+        items = [f"schedule={self.schedule}"]
+        if self.schedule != "fused":
+            items.append(f"n_steps={self.n_steps}")
+        if self.y_chunks is not None:
+            items.append(f"y_chunks={self.y_chunks}")
+        items += [f"reduce={self.reduce}", f"precision={self.precision}",
+                  f"impl={self.impl}"]
+        return ",".join(items)
+
+
+def point_from_plan(plan) -> PlanPoint:
+    """Project a ReconstructionPlan onto the planner's search coordinates."""
+    return PlanPoint(
+        grid=plan.grid, schedule=plan.schedule, n_steps=plan.n_steps,
+        y_chunks=plan.y_chunks, reduce=plan.reduce,
+        precision=plan.resolved_precision().storage, impl=plan.impl,
+        data_size=plan._data_size if plan.mesh is not None else None,
+    )
+
+
+def predict_point(g: CBCTGeometry, point: PlanPoint,
+                  system: SystemConstants = ABCI) -> PerfBreakdown:
+    """Plan-aware Eqs. 8-19: the paper model with the plan's knobs applied."""
+    prec = resolve_precision(point.precision)
+    sb = float(prec.storage_bytes)
+    grid = point.grid
+    base = predict(g, grid, system, storage_bytes=sb)
+
+    # impl-aware back-projection: rescale the update-rate part of Eq. 12
+    # (t_bp = t_h2d + updates/gups); the H2D part is traffic, not compute.
+    factor = IMPL_GUPS_FACTOR.get(point.impl)
+    if factor is None:
+        raise ValueError(
+            f"unknown impl {point.impl!r}; choose from "
+            f"{sorted(IMPL_GUPS_FACTOR)}")
+    t_update = (base.t_bp - base.t_h2d) / factor
+    t_bp = base.t_h2d + t_update
+
+    # chunked: the gathered Q^T batch is re-streamed from HBM once per
+    # y-chunk (each output chunk reads every projection of the batch), so
+    # (y_chunks - 1) extra passes over the per-column projection bytes.
+    if point.schedule == "chunked":
+        y_chunks = point.y_chunks or 1
+        qt_bytes = sb * g.n_u * g.n_v * (g.n_proj / grid.c)
+        t_bp += (y_chunks - 1) * qt_bytes / (system.bw_hd
+                                             * system.n_hd_links)
+
+    # pipelined/chunked: per-micro-batch launch overhead (finite n_steps).
+    if point.schedule != "fused":
+        t_bp += point.n_steps * STEP_OVERHEAD_S
+
+    # reduce-mode-aware volume traffic: ring allreduce (psum) moves
+    # 2(C-1)/C x the slab bytes per rank, reduce-scatter (C-1)/C x.
+    c = grid.c
+    if c == 1:
+        t_reduce = 0.0
+    else:
+        ring = (c - 1) / c
+        t_reduce = base.t_reduce * ring * (2.0 if point.reduce == "psum"
+                                           else 1.0)
+
+    # Overlap needs something to overlap WITH: a pipelined/chunked schedule
+    # at n_steps=1 degenerates to one gather + one back-projection (the
+    # engine's scan has zero steps), so Eq. 17's max only applies when the
+    # stream is actually micro-batched.
+    return dataclasses.replace(
+        base, t_bp=t_bp, t_reduce=t_reduce,
+        overlap=point.schedule != "fused" and point.n_steps > 1,
+    )
+
+
+def predict_plan(plan, system: SystemConstants = ABCI) -> PerfBreakdown:
+    """Plan-aware cost of a concrete ReconstructionPlan."""
+    return predict_point(plan.geometry, point_from_plan(plan), system)

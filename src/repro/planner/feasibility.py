@@ -1,0 +1,124 @@
+"""Per-device memory-footprint model + feasibility pruning.
+
+The paper sizes its grid from memory first (Eq. 5-7: R is the smallest slab
+count whose sub-volume fits a GPU) and only then optimizes time. This module
+is that first stage for the full plan space: a byte model of what ONE device
+holds live at the peak of each schedule, checked against an HBM budget, plus
+the kernel-level VMEM fit (tune.vmem_bytes) for impl="kernel".
+
+Footprint terms (per device, peak):
+
+  proj_shard  raw f32 input shard, N_p/(R*C) projections (Eq. 5 load split).
+  gathered    the post-AllGather filtered column batch in storage dtype:
+              N_p/(C*n_steps) projections — double-buffered under the
+              pipelined/chunked schedules (batch s gathers while s-1
+              back-projects, Fig. 4).
+  slab        live volume accumulator state (f32):
+                fused      one (N_x/R, N_y, N_z) slab (the BP output);
+                pipelined  2x — the scan carry accumulator plus the current
+                           batch's BP output before the add;
+                chunked    the accumulator (scattered over the data axis
+                           when reduce="scatter" — the whole point of the
+                           schedule) plus 2 chunk-sized partials.
+  temps       filter workspace: the per-step local batch at f32 plus its
+              FFT pad (~2x).
+
+The model is deliberately coarse — it decides FEASIBILITY (can this plan
+run at all), not allocation; a ~1.5x XLA workspace margin is the caller's
+business via the budget it passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.geometry import CBCTGeometry
+from repro.core.precision import resolve_precision
+
+from .cost import PlanPoint
+
+# Default per-device HBM budget: 16 GiB (v5e chip / paper's V100).
+DEFAULT_HBM_BYTES = 16 * 2**30
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryFootprint:
+    """Peak live bytes on one device, by pipeline stage."""
+
+    proj_shard: int
+    gathered: int
+    slab: int
+    temps: int
+
+    @property
+    def total(self) -> int:
+        return self.proj_shard + self.gathered + self.slab + self.temps
+
+
+def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
+    grid = point.grid
+    prec = resolve_precision(point.precision)
+    sb = prec.storage_bytes
+    pix = g.n_u * g.n_v
+
+    np_local = g.n_proj // grid.n_ranks          # loaded per rank (Eq. 5)
+    proj_shard = np_local * pix * 4
+
+    np_step_col = g.n_proj // (grid.c * point.n_steps)   # gathered per step
+    buffers = 1 if point.schedule == "fused" else 2
+    gathered = buffers * np_step_col * pix * sb
+
+    nx_slab = g.n_x // grid.r
+    slab_f32 = nx_slab * g.n_y * g.n_z * 4
+    if point.schedule == "fused":
+        slab = slab_f32
+    elif point.schedule == "pipelined":
+        slab = 2 * slab_f32
+    else:  # chunked
+        y_chunks = point.y_chunks or 1
+        # The engine's accumulator is scattered over the DATA axis only
+        # (the pod axis finishes with a replicated psum) — grid.c is the
+        # right divisor only when the whole column group is the data axis.
+        scatter_div = ((point.data_size or grid.c)
+                       if point.reduce == "scatter" else 1)
+        chunk = nx_slab * (g.n_y // y_chunks) * g.n_z * 4
+        slab = slab_f32 // scatter_div + 2 * chunk
+
+    temps = 2 * (np_local // max(1, point.n_steps)) * pix * 4
+    return MemoryFootprint(proj_shard, gathered, slab, temps)
+
+
+def check_feasible(g: CBCTGeometry, point: PlanPoint,
+                   hbm_bytes: int = DEFAULT_HBM_BYTES,
+                   vmem_budget: int | None = None) -> tuple[bool, str]:
+    """(feasible, reason). reason is "" when feasible, else human-readable.
+
+    Checks the HBM footprint model and, for impl="kernel", whether ANY
+    (bi, bj, bs) tiling of the per-call back-projection fits the VMEM
+    budget (kernels/backproject/tune.py working-set model).
+    """
+    fp = plan_footprint(g, point)
+    if fp.total > hbm_bytes:
+        return False, (
+            f"footprint {fp.total / 2**30:.2f} GiB exceeds the HBM budget "
+            f"of {hbm_bytes / 2**30:.2f} GiB (proj {fp.proj_shard >> 20} MiB"
+            f" + gathered {fp.gathered >> 20} MiB + slab {fp.slab >> 20} MiB"
+            f" + temps {fp.temps >> 20} MiB)")
+    if point.impl == "kernel":
+        if g.n_z % 2:
+            return False, f"impl='kernel' requires even N_z, got {g.n_z}"
+        from repro.core.plan import bp_call_shape
+        from repro.kernels.backproject import tune
+        grid = point.grid
+        nx_call, ny_call, np_call = bp_call_shape(
+            g, grid.r, grid.c, point.schedule, point.n_steps,
+            point.y_chunks)
+        prec = resolve_precision(point.precision)
+        budget = tune.DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+        need = tune.min_vmem_bytes(nx_call, ny_call, np_call, g.n_u, g.n_v,
+                                   g.n_z // 2, qt_dtype=prec.storage_dtype)
+        if need > budget:
+            return False, (
+                f"no kernel tiling of ({nx_call}, {ny_call}, Np={np_call}) "
+                f"fits VMEM: minimal working set {need} B > budget "
+                f"{budget} B")
+    return True, ""

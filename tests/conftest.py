@@ -16,6 +16,12 @@ os.environ.setdefault(
     os.path.join(tempfile.mkdtemp(prefix="repro-tune-"),
                  "bp_tune_cache.json"),
 )
+# Same hermeticity for the planner's measured-refinement cache.
+os.environ.setdefault(
+    "REPRO_PLAN_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-plan-"),
+                 "plan_measure_cache.json"),
+)
 
 jax.config.update("jax_enable_x64", False)
 

@@ -1,0 +1,461 @@
+"""Auto-planner subsystem: plan-aware cost model, feasibility pruning,
+ranked search, measured refinement, the `plan_from_spec(g, "auto")` wiring,
+spec-error ergonomics, and the legacy-entry-point deprecation warnings."""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.distributed import IFDKGrid, grid_candidates, input_sharding
+from repro.core.fdk import reconstruct
+from repro.core.geometry import default_geometry, paper_geometry
+from repro.core.perf_model import ABCI
+from repro.core.phantom import forward_project
+from repro.core.plan import ReconstructionPlan, plan_from_spec
+from repro.core.precision import Precision
+from repro.parallel.mesh import make_mesh, single_device_mesh
+from repro.planner import (
+    PlanPoint, auto_plan, check_feasible, enumerate_points, plan_footprint,
+    point_from_plan, predict_plan, predict_point, search_grids, search_plans,
+)
+from repro.planner import measure as plan_measure
+from repro.planner.cost import STEP_OVERHEAD_S
+
+paper_problem = paper_geometry
+
+
+GRID_256 = IFDKGrid(r=32, c=8)
+
+
+# ---------------------------------------------------------------------------
+# cost.py: plan-aware Eq. 8-19
+# ---------------------------------------------------------------------------
+
+class TestCost:
+    def test_fused_serializes_stages(self):
+        g = paper_problem()
+        b = predict_point(g, PlanPoint(grid=GRID_256, schedule="fused"))
+        assert not b.overlap
+        assert b.t_compute == pytest.approx(
+            b.t_load + b.t_flt + b.t_allgather + b.t_bp)
+
+    def test_pipelined_overlaps_per_eq17(self):
+        g = paper_problem()
+        b = predict_point(g, PlanPoint(grid=GRID_256, schedule="pipelined",
+                                       n_steps=4))
+        assert b.overlap
+        assert b.t_compute == pytest.approx(
+            max(b.t_load, b.t_flt, b.t_allgather, b.t_bp))
+
+    def test_pipelined_single_step_has_no_overlap(self):
+        """n_steps=1 degenerates to fused semantics — the model must not
+        award it Eq. 17's max."""
+        g = paper_problem()
+        b = predict_point(g, PlanPoint(grid=GRID_256, schedule="pipelined",
+                                       n_steps=1))
+        assert not b.overlap
+
+    def test_storage_dtype_scales_comm(self):
+        g = paper_problem()
+        f32 = predict_point(g, PlanPoint(grid=GRID_256, precision="fp32"))
+        b16 = predict_point(g, PlanPoint(grid=GRID_256, precision="bf16"))
+        assert b16.t_allgather == pytest.approx(f32.t_allgather / 2)
+        assert b16.t_load == pytest.approx(f32.t_load / 2)
+
+    def test_chunked_restreams_projections(self):
+        """More y-chunks -> more Q^T re-reads -> larger T_bp; the pipelined
+        schedule at the same n_steps is the lower envelope."""
+        g = paper_problem()
+        pipe = predict_point(g, PlanPoint(grid=GRID_256,
+                                          schedule="pipelined", n_steps=4))
+        prev = pipe.t_bp
+        for yc in (2, 8, 32):
+            b = predict_point(g, PlanPoint(grid=GRID_256, schedule="chunked",
+                                           n_steps=4, y_chunks=yc))
+            assert b.t_bp > prev
+            prev = b.t_bp
+
+    def test_step_overhead_penalizes_deep_pipelines(self):
+        g = paper_problem()
+        t2 = predict_point(g, PlanPoint(grid=GRID_256, schedule="pipelined",
+                                        n_steps=2)).t_bp
+        t8 = predict_point(g, PlanPoint(grid=GRID_256, schedule="pipelined",
+                                        n_steps=8)).t_bp
+        assert t8 == pytest.approx(t2 + 6 * STEP_OVERHEAD_S)
+
+    def test_psum_doubles_scatter_reduce_traffic(self):
+        g = paper_problem()
+        ps = predict_point(g, PlanPoint(grid=GRID_256, reduce="psum"))
+        sc = predict_point(g, PlanPoint(grid=GRID_256, reduce="scatter"))
+        assert ps.t_reduce == pytest.approx(2 * sc.t_reduce)
+        c1 = predict_point(g, PlanPoint(grid=IFDKGrid(r=32, c=1)))
+        assert c1.t_reduce == 0.0
+
+    def test_impl_factors_order_t_bp(self):
+        g = paper_problem()
+        ts = {impl: predict_point(
+                  g, PlanPoint(grid=GRID_256, impl=impl)).t_bp
+              for impl in ("reference", "factorized", "kernel")}
+        assert ts["reference"] > ts["factorized"] > ts["kernel"]
+        with pytest.raises(ValueError, match="unknown impl"):
+            predict_point(g, PlanPoint(grid=GRID_256, impl="cuda"))
+
+    def test_predict_plan_matches_point(self):
+        g = default_geometry(16, n_proj=8)
+        plan = ReconstructionPlan(geometry=g, schedule="pipelined",
+                                  n_steps=2, precision="bf16")
+        assert predict_plan(plan) == predict_point(g, point_from_plan(plan))
+
+
+# ---------------------------------------------------------------------------
+# feasibility.py: per-device memory model
+# ---------------------------------------------------------------------------
+
+class TestFeasibility:
+    def test_chunked_scatter_divides_slab(self):
+        g = paper_problem()
+        fused = plan_footprint(g, PlanPoint(grid=GRID_256, schedule="fused"))
+        chunk = plan_footprint(g, PlanPoint(grid=GRID_256,
+                                            schedule="chunked", n_steps=8,
+                                            y_chunks=16, reduce="scatter"))
+        assert chunk.slab < fused.slab
+        assert chunk.gathered < fused.gathered
+        assert chunk.total < fused.total
+
+    def test_scatter_divisor_is_data_axis_not_full_column(self):
+        """The engine scatters the chunked accumulator over the DATA axis
+        only (pod finishes replicated): on a multi-pod mesh the footprint
+        must divide by data_size, not by all C columns."""
+        g = paper_problem()
+        single_pod = PlanPoint(grid=GRID_256, schedule="chunked", n_steps=8,
+                               y_chunks=16, reduce="scatter")
+        multi_pod = dataclasses.replace(single_pod, data_size=4)
+        assert plan_footprint(g, multi_pod).slab > \
+            plan_footprint(g, single_pod).slab
+        mesh = single_device_mesh()
+        plan = ReconstructionPlan(geometry=default_geometry(16, n_proj=8),
+                                  mesh=mesh)
+        assert point_from_plan(plan).data_size == 1
+
+    def test_infeasible_reason_names_budget(self):
+        g = paper_problem()
+        point = PlanPoint(grid=IFDKGrid(r=1, c=1))
+        ok, reason = check_feasible(g, point, hbm_bytes=16 * 2**30)
+        assert not ok and "exceeds the HBM budget" in reason
+
+    def test_kernel_vmem_floor(self):
+        """A VMEM budget below the kernel's minimal working set prunes
+        impl='kernel' with a kernel-specific reason; the XLA impls are
+        untouched by it."""
+        g = default_geometry(16, n_proj=8)
+        point = PlanPoint(grid=IFDKGrid(r=1, c=1), impl="kernel")
+        ok, _ = check_feasible(g, point)
+        assert ok
+        ok, reason = check_feasible(g, point, vmem_budget=1024)
+        assert not ok and "fits VMEM" in reason
+        ok, _ = check_feasible(
+            g, PlanPoint(grid=IFDKGrid(r=1, c=1)), vmem_budget=1024)
+        assert ok
+
+    def test_kernel_needs_even_nz(self):
+        g = dataclasses.replace(default_geometry(16, n_proj=8), n_z=15)
+        ok, reason = check_feasible(
+            g, PlanPoint(grid=IFDKGrid(r=1, c=1), impl="kernel"))
+        assert not ok and "even N_z" in reason
+
+
+# ---------------------------------------------------------------------------
+# search.py: enumeration + ranking
+# ---------------------------------------------------------------------------
+
+class TestSearch:
+    def test_grid_candidates_divisibility(self):
+        g = paper_problem()
+        grids = grid_candidates(g, 256)
+        assert IFDKGrid(r=32, c=8) in grids
+        for gr in grids:
+            assert gr.n_ranks == 256 and g.n_x % gr.r == 0
+        # 6 devices: only R in {1, 2} divide both 6 and n_x
+        g6 = default_geometry(64, n_proj=96)
+        assert [gr.r for gr in grid_candidates(g6, 6)] == [1, 2]
+        # ranks must also tile the projections (validate()'s Eq. 5 rule)
+        assert grid_candidates(default_geometry(64, n_proj=128), 6) == []
+
+    def test_enumerate_points_respects_structure(self):
+        g = default_geometry(16, n_proj=8)
+        pts = list(enumerate_points(g, IFDKGrid(r=1, c=1)))
+        assert all(p.n_steps == 1 for p in pts if p.schedule == "fused")
+        assert all(p.reduce == "psum" for p in pts)  # c == 1: no scatter
+        assert any(p.schedule == "chunked" and p.y_chunks == 4 for p in pts)
+
+    def test_search_plans_returns_validated_ranked_plans(self):
+        g = default_geometry(16, n_proj=8)
+        props = search_plans(g, None, top_k=6)
+        assert props and all(p.feasible for p in props)
+        for p in props:
+            assert p.plan is not None
+            assert p.plan.validate() is p.plan
+        ts = [p.predicted for p in props]
+        assert ts == sorted(ts)
+
+    def test_tight_budget_prunes_fused_for_chunked(self):
+        """Acceptance: with a budget between the chunked and fused
+        footprints, the fused plan is infeasible and the search returns a
+        chunked winner instead."""
+        g = default_geometry(16, n_proj=64)
+        grid = IFDKGrid(r=1, c=1)
+        fused_total = plan_footprint(
+            g, PlanPoint(grid=grid, schedule="fused")).total
+        chunk_total = plan_footprint(
+            g, PlanPoint(grid=grid, schedule="chunked", n_steps=8,
+                         y_chunks=4)).total
+        assert chunk_total < fused_total
+        budget = (fused_total + chunk_total) // 2
+        props = search_plans(g, None, hbm_bytes=budget,
+                             schedules=("fused", "chunked"), top_k=4)
+        assert props and props[0].point.schedule == "chunked"
+        assert all(p.point.schedule != "fused" for p in props)
+        # and the fused plan really was pruned as infeasible, not absent:
+        with_inf = search_plans(g, None, hbm_bytes=budget,
+                                schedules=("fused", "chunked"), top_k=100,
+                                include_infeasible=True)
+        fused = [p for p in with_inf if p.point.schedule == "fused"]
+        assert fused and not fused[0].feasible
+
+    def test_bf16_outranks_f32_when_allgather_bound(self):
+        """Acceptance: make AllGather the Eq. 17 bottleneck -> the halved
+        collective bytes of bf16 storage win the ranking."""
+        g = default_geometry(16, n_proj=8)
+        ag_bound = dataclasses.replace(ABCI, th_allgather=1e-3)
+        props = search_plans(g, None, system=ag_bound,
+                             precisions=("fp32", "bf16"),
+                             schedules=("pipelined",),
+                             n_steps_candidates=(2,),
+                             impls=("factorized",), top_k=8)
+        assert [p.point.precision for p in props] == ["bf16", "fp32"]
+        b = props[0].breakdown
+        assert b.t_compute == pytest.approx(b.t_allgather)  # really AG-bound
+        assert props[0].predicted == pytest.approx(props[1].predicted / 2,
+                                                   rel=0.1)
+
+    def test_search_grids_untileable_device_count_raises(self):
+        # 4096 projections cannot spread over 100 ranks: a clear error,
+        # not an empty table
+        with pytest.raises(ValueError, match="no rectangular R x C"):
+            search_grids(paper_problem(), 100)
+
+    def test_search_grids_paper_scale(self):
+        g = paper_problem()
+        props = search_grids(g, 256, top_k=8)
+        assert props and all(p.feasible for p in props)
+        assert all(p.point.grid.n_ranks == 256 for p in props)
+        assert all(p.plan is None for p in props)
+        # every proposal's spec string round-trips through plan_from_spec
+        # (construction parses the knobs; validation is geometry-specific)
+        for p in props:
+            plan = plan_from_spec(g, p.spec())
+            assert plan.schedule == p.point.schedule
+            assert plan.reduce == p.point.reduce
+            assert plan.resolved_precision().storage == p.point.precision
+
+
+# ---------------------------------------------------------------------------
+# auto_plan / plan_from_spec("auto") wiring
+# ---------------------------------------------------------------------------
+
+class TestAutoPlan:
+    @pytest.fixture(scope="class")
+    def case16(self):
+        g = default_geometry(16, n_proj=8)
+        proj = forward_project(g)
+        oracle = np.array(reconstruct(g, proj, impl="factorized",
+                                      precision="fp32"))
+        return g, proj, oracle
+
+    def _check_oracle(self, out, oracle, storage):
+        p = Precision(storage)
+        scale = float(np.max(np.abs(oracle))) + 1e-12
+        rmse = float(np.sqrt(np.mean((out - oracle) ** 2))) / scale
+        assert rmse < p.rmse_tol(), rmse
+
+    def test_auto_engine_matches_oracle_on_1x1x1_mesh(self, case16):
+        """Acceptance: plan_from_spec(g, "auto") on a 1x1x1 mesh returns a
+        validate()-clean plan whose engine reproduces the f32 oracle."""
+        g, proj, oracle = case16
+        mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+        plan = plan_from_spec(g, "auto", mesh=mesh)
+        assert plan.validate() is plan
+        out = np.asarray(plan.build()(
+            jax.device_put(proj, input_sharding(mesh))))
+        out = out.reshape(g.n_x, g.n_y, g.n_z)
+        self._check_oracle(out, oracle, plan.resolved_precision().storage)
+
+    def test_auto_no_mesh_matches_oracle(self, case16):
+        g, proj, oracle = case16
+        plan = plan_from_spec(g, "auto,precision=fp32")
+        out = np.asarray(plan.build()(proj))
+        self._check_oracle(out, oracle, "fp32")
+
+    def test_auto_pins_restrict_the_search(self, case16):
+        g, _, _ = case16
+        plan = plan_from_spec(g, "auto,schedule=chunked,precision=bf16")
+        assert plan.schedule == "chunked" and plan.y_chunks is not None
+        assert plan.resolved_precision().storage == "bf16"
+
+    def test_auto_pinned_knobs_constrain_the_schedule(self, case16):
+        """Pinning n_steps/y_chunks must not let a schedule that ignores
+        the knob win with the pin silently dropped."""
+        g, _, _ = case16
+        p = plan_from_spec(g, "auto,y_chunks=4")
+        assert p.schedule == "chunked" and p.y_chunks == 4
+        p = plan_from_spec(g, "auto,n_steps=4")
+        assert p.schedule != "fused" and p.n_steps == 4
+        with pytest.raises(ValueError, match="pins conflict"):
+            plan_from_spec(g, "auto,schedule=fused,n_steps=4")
+        with pytest.raises(ValueError, match="pins conflict"):
+            plan_from_spec(g, "auto,schedule=pipelined,y_chunks=4")
+
+    def test_auto_unknown_pin_raises(self, case16):
+        g, _, _ = case16
+        with pytest.raises(ValueError, match="cannot pin"):
+            auto_plan(g, bogus=3)
+
+    def test_auto_infeasible_raises_with_cause(self, case16):
+        """Budget failures and divisibility failures get DIFFERENT errors —
+        the user must be steered at the knob that actually failed."""
+        g, _, _ = case16
+        with pytest.raises(ValueError, match="exceed the memory budget"):
+            auto_plan(g, hbm_bytes=1024)
+        # N_p local = 8: n_steps=3 never divides -> not a budget problem
+        with pytest.raises(ValueError, match="no valid candidate"):
+            auto_plan(g, n_steps=3)
+
+    def test_cpu_auto_avoids_interpret_mode_kernel(self, case16):
+        g, _, _ = case16
+        if jax.default_backend() != "tpu":
+            assert plan_from_spec(g, "auto").impl == "factorized"
+
+
+# ---------------------------------------------------------------------------
+# measure.py: timed refinement + file-backed cache
+# ---------------------------------------------------------------------------
+
+class TestMeasure:
+    def test_refine_times_and_reranks(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_CACHE",
+                           str(tmp_path / "plan_cache.json"))
+        plan_measure.clear_cache()
+        g = default_geometry(16, n_proj=8)
+        props = search_plans(g, None, impls=("factorized",), top_k=4)
+        refined = plan_measure.refine(g, props, top_k=2, iters=1)
+        assert len(refined) == len(props)
+        head = refined[:2]
+        assert all(p.measured is not None and p.measured > 0 for p in head)
+        assert head[0].measured <= head[1].measured
+        assert all(p.measured is None for p in refined[2:])
+
+    def test_file_cache_serves_second_lookup(self, tmp_path, monkeypatch):
+        cache = tmp_path / "plan_cache.json"
+        monkeypatch.setenv("REPRO_PLAN_CACHE", str(cache))
+        plan_measure.clear_cache()
+        g = default_geometry(16, n_proj=8)
+        props = search_plans(g, None, impls=("factorized",), top_k=1)
+        t0 = plan_measure.measure_proposal(g, props[0], iters=1)
+        assert cache.exists()
+        plan_measure.clear_cache()  # simulate a fresh process
+        hits = plan_measure.file_cache_hits()
+        t1 = plan_measure.measure_proposal(g, props[0], iters=1)
+        assert t1 == t0  # served verbatim from disk, not re-timed
+        assert plan_measure.file_cache_hits() == hits + 1
+
+    def test_cache_key_sees_engine_identity(self, tmp_path, monkeypatch):
+        """Two plans differing only in a knob outside the spec string (the
+        ramp window) must not share a timing entry."""
+        monkeypatch.setenv("REPRO_PLAN_CACHE",
+                           str(tmp_path / "plan_cache.json"))
+        plan_measure.clear_cache()
+        g = default_geometry(16, n_proj=8)
+        a = search_plans(g, None, impls=("factorized",), top_k=1)[0]
+        b = search_plans(g, None, impls=("factorized",), top_k=1,
+                         window="hann")[0]
+        assert a.spec() == b.spec()  # the spec alone cannot tell them apart
+        ka = plan_measure._measure_key(g, a, 1)
+        kb = plan_measure._measure_key(g, b, 1)
+        assert ka != kb
+
+    def test_grid_only_proposal_is_not_measurable(self):
+        g = paper_problem()
+        props = search_grids(g, 256, top_k=1)
+        with pytest.raises(ValueError, match="grid-only"):
+            plan_measure.measure_proposal(g, props[0])
+
+
+# ---------------------------------------------------------------------------
+# plan_from_spec error ergonomics (satellite)
+# ---------------------------------------------------------------------------
+
+class TestSpecErrors:
+    def test_bare_typo_suggests_key_value(self):
+        g = default_geometry(16, n_proj=8)
+        with pytest.raises(ValueError) as ei:
+            plan_from_spec(g, "pipelned")
+        msg = str(ei.value)
+        assert "valid keys: impl, window, precision, schedule" in msg
+        assert "did you mean 'schedule=pipelined'?" in msg
+
+    def test_unknown_key_lists_valid_and_nearest(self):
+        g = default_geometry(16, n_proj=8)
+        with pytest.raises(ValueError) as ei:
+            plan_from_spec(g, "shedule=fused")
+        msg = str(ei.value)
+        assert "unknown plan spec key 'shedule'" in msg
+        assert "did you mean 'schedule=...'" in msg
+
+    def test_valid_value_of_wrong_kind_suggests_its_key(self):
+        g = default_geometry(16, n_proj=8)
+        with pytest.raises(ValueError, match="did you mean 'reduce=scatter'"):
+            plan_from_spec(g, "scatter")
+
+    def test_auto_token_still_parses_normally(self):
+        g = default_geometry(16, n_proj=8)
+        plan = plan_from_spec(g, "auto , precision=fp32")
+        assert plan.resolved_precision().storage == "fp32"
+
+
+# ---------------------------------------------------------------------------
+# legacy entry-point deprecation (satellite)
+# ---------------------------------------------------------------------------
+
+class TestDeprecationWarnings:
+    def _fired(self, fn):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            fn()
+        return [w for w in rec if issubclass(w.category, DeprecationWarning)
+                and "ReconstructionPlan" in str(w.message)]
+
+    def test_each_legacy_entry_point_warns_exactly_once_per_process(self):
+        from repro.core import fdk
+        from repro.core.distributed import make_distributed_fdk
+        from repro.core.pipeline import make_chunked_fdk, make_pipelined_fdk
+
+        g = default_geometry(16, n_proj=8)
+        proj = forward_project(g)
+        mesh = single_device_mesh()
+        calls = {
+            "fdk.reconstruct": lambda: reconstruct(g, proj),
+            "make_distributed_fdk": lambda: make_distributed_fdk(mesh, g),
+            "make_pipelined_fdk": lambda: make_pipelined_fdk(mesh, g,
+                                                             n_steps=2),
+            "make_chunked_fdk": lambda: make_chunked_fdk(mesh, g, n_steps=2,
+                                                         y_chunks=4),
+        }
+        # the registry is process-wide; reset so this test is order-independent
+        fdk._DEPRECATION_FIRED.clear()
+        for name, call in calls.items():
+            first = self._fired(call)
+            assert len(first) == 1, name
+            assert name in str(first[0].message)
+            assert len(self._fired(call)) == 0, f"{name} warned twice"
