@@ -1,0 +1,71 @@
+"""Shard-store I/O bandwidth: the measured counterpart of the perf model's
+T_read/T_write terms (Eq. 8/16).
+
+Times the slice-per-rank store (repro/io) on this machine's filesystem:
+chunked write, full scatter-read, a single-rank region read, and the
+checkpoint save/restore built on the same core. Rows report GB/s so the
+numbers slot directly against `MachineSpec.bw_load`/`bw_store` — on the
+paper's GPFS these are the 50/28.5 GB/s constants; on a laptop SSD expect
+single-digit GB/s (page-cache-warm reads higher).
+
+    python benchmarks/run.py --suite io [--fast]
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def _time(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(iters: int = 3, fast: bool = False):
+    from repro.io import shard_store
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    n = 64 if fast else 192
+    chunks = (4, 1, 1) if fast else (8, 1, 1)
+    arr = np.random.default_rng(0).standard_normal(
+        (n, n, n)).astype(np.float32)
+    gb = arr.nbytes / 1e9
+    root = tempfile.mkdtemp(prefix="repro-bench-io-")
+    rows = []
+    try:
+        store = f"{root}/arr"
+
+        t = _time(lambda: shard_store.save_array(store, arr, chunks=chunks),
+                  iters)
+        rows.append((f"io/shard_write/{n}^3", t * 1e6, f"{gb / t:.2f}GB/s"))
+
+        t = _time(lambda: shard_store.load_array(store), iters)
+        rows.append((f"io/shard_read/{n}^3", t * 1e6, f"{gb / t:.2f}GB/s"))
+
+        rank_rows = n // chunks[0]
+        region = (slice(0, rank_rows), slice(0, n), slice(0, n))
+        t = _time(lambda: shard_store.read_region(store, region), iters)
+        rows.append((f"io/rank_read/{rank_rows}x{n}x{n}", t * 1e6,
+                     f"{gb / chunks[0] / t:.2f}GB/s"))
+
+        tree = {"vol": arr}
+        t = _time(lambda: save_checkpoint(f"{root}/ckpt", 1, tree), iters)
+        rows.append((f"io/ckpt_save/{n}^3", t * 1e6, f"{gb / t:.2f}GB/s"))
+
+        t = _time(lambda: load_checkpoint(f"{root}/ckpt", 1, tree), iters)
+        rows.append((f"io/ckpt_restore/{n}^3", t * 1e6, f"{gb / t:.2f}GB/s"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -36,9 +36,9 @@ def _fmt_row(i, p, g):
     cols = [
         f"{i:>2}", f"{pt.grid.r}x{pt.grid.c}", f"{sched:<14}",
         f"{pt.reduce:<7}", f"{pt.precision:<4}", f"{pt.impl:<10}",
-        f"{b.t_load:7.2f}", f"{b.t_flt:7.2f}", f"{b.t_allgather:7.2f}",
-        f"{b.t_bp:7.2f}", f"{b.t_compute:7.2f}", f"{b.t_post:7.2f}",
-        f"{b.t_runtime:8.2f}",
+        f"{b.t_read:7.2f}", f"{b.t_flt:7.2f}", f"{b.t_allgather:7.2f}",
+        f"{b.t_bp:7.2f}", f"{b.t_compute:7.2f}", f"{b.t_write:7.2f}",
+        f"{b.t_post:7.2f}", f"{b.t_runtime:8.2f}",
         f"{p.predicted_gups(g):9.1f}",
         f"{p.footprint.total / 2**30:6.2f}",
     ]
@@ -48,9 +48,9 @@ def _fmt_row(i, p, g):
     return "  ".join(cols)
 
 
-_HEADER = ("  #  RxC    schedule        reduce   prec  impl         t_load"
-           "   t_flt    t_ag     t_bp   t_cmp   t_post     t_run      GUPS"
-           "    GiB  status")
+_HEADER = ("  #  RxC    schedule        reduce   prec  impl         t_read"
+           "   t_flt    t_ag     t_bp   t_cmp   t_wr     t_post     t_run"
+           "      GUPS    GiB  status")
 
 
 def main(argv=None) -> None:
@@ -65,6 +65,18 @@ def main(argv=None) -> None:
     ap.add_argument("--system", choices=sorted(_SYSTEMS), default="abci")
     ap.add_argument("--hbm-gib", type=float, default=16.0,
                     help="per-device HBM budget")
+    ap.add_argument("--pfs-read-gbs", type=float, default=None,
+                    help="override the system's aggregate PFS read "
+                         "bandwidth (GB/s) — the T_read term; throttle to "
+                         "see load-bound rankings")
+    ap.add_argument("--pfs-write-gbs", type=float, default=None,
+                    help="override the aggregate PFS write bandwidth "
+                         "(GB/s) — the T_write term")
+    ap.add_argument("--rank-io-gbs", type=float, default=None,
+                    help="per-rank PFS link bandwidth (GB/s): caps "
+                         "T_read/T_write at n_ranks x this, so "
+                         "few-writer plans (psum) price worse than the "
+                         "slice-per-rank store (scatter)")
     ap.add_argument("--top-k", type=int, default=8)
     ap.add_argument("--all", action="store_true",
                     help="include infeasible candidates in the table")
@@ -81,6 +93,16 @@ def main(argv=None) -> None:
                  "(grid-only projections have nothing to build)")
 
     system = _SYSTEMS[args.system]
+    for flag, value in [("--pfs-read-gbs", args.pfs_read_gbs),
+                        ("--pfs-write-gbs", args.pfs_write_gbs),
+                        ("--rank-io-gbs", args.rank_io_gbs)]:
+        if value is not None and value <= 0:
+            ap.error(f"{flag} must be positive (got {value})")
+    system = system.with_pfs(
+        read=None if args.pfs_read_gbs is None else args.pfs_read_gbs * 1e9,
+        write=(None if args.pfs_write_gbs is None
+               else args.pfs_write_gbs * 1e9),
+        rank_io=None if args.rank_io_gbs is None else args.rank_io_gbs * 1e9)
     hbm = int(args.hbm_gib * 2**30)
     if args.local:
         g = default_geometry(32, n_proj=64)

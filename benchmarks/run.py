@@ -26,7 +26,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main(argv=None) -> None:
     from benchmarks import (
-        bench_backprojection, bench_end_to_end, bench_filtering,
+        bench_backprojection, bench_end_to_end, bench_filtering, bench_io,
         bench_scaling_model, plan_search, roofline_table,
     )
     suites = [
@@ -36,6 +36,7 @@ def main(argv=None) -> None:
         ("fig6", bench_end_to_end.run),           # end-to-end GUPS
         ("roofline", roofline_table.run),         # dry-run roofline terms
         ("plan_search", plan_search.run),         # auto-planner ranked table
+        ("io", bench_io.run),                     # shard-store read/write GB/s
     ]
     names = [n for n, _ in suites]
     ap = argparse.ArgumentParser(description="iFDK benchmark driver")

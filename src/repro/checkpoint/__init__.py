@@ -1,1 +1,4 @@
-from .io import save_checkpoint, load_checkpoint, latest_step, CheckpointManager
+from .io import (  # noqa: F401
+    CheckpointManager, StoreError, committed_steps, latest_step,
+    load_checkpoint, save_checkpoint,
+)

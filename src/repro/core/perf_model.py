@@ -14,13 +14,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from .distributed import IFDKGrid
 from .geometry import CBCTGeometry
 
 
 @dataclasses.dataclass(frozen=True)
-class SystemConstants:
+class MachineSpec:
+    """Per-system micro-benchmark constants (§4.2.1), including the
+    parallel-filesystem bandwidths the I/O terms (Eq. 8/16 — the planner's
+    T_read/T_write) are priced from."""
+
     name: str
     bw_load: float          # PFS aggregate read bandwidth, B/s
     bw_store: float         # PFS aggregate write bandwidth, B/s
@@ -31,10 +36,46 @@ class SystemConstants:
     bw_hd: float            # host<->device (PCIe) bandwidth per connector, B/s
     n_hd_links: int         # PCIe connectors per node (paper N_PCIe)
     devices_per_node: int
+    # Per-rank PFS link bandwidth, B/s. The slice-per-rank store (repro/io)
+    # reads/writes one file per rank, so aggregate I/O bandwidth is
+    # min(PFS aggregate, n_concurrent_ranks * bw_rank_io): few writers are
+    # link-bound, many writers saturate the filesystem. None = uncapped
+    # (the paper's Eq. 8/16, which assume full aggregate bandwidth).
+    bw_rank_io: Optional[float] = None
+
+    def with_pfs(self, read: Optional[float] = None,
+                 write: Optional[float] = None,
+                 rank_io: Optional[float] = None) -> "MachineSpec":
+        """This machine with its PFS re-benchmarked (or throttled): the knob
+        the planner's with-I/O ranking is regression-tested against."""
+        updates = {}
+        if read is not None:
+            updates["bw_load"] = read
+        if write is not None:
+            updates["bw_store"] = write
+        if rank_io is not None:
+            updates["bw_rank_io"] = rank_io
+        return dataclasses.replace(self, **updates)
+
+    def agg_read_bw(self, n_readers: int) -> float:
+        """Aggregate PFS read bandwidth `n_readers` concurrent ranks see."""
+        if self.bw_rank_io is None:
+            return self.bw_load
+        return min(self.bw_load, n_readers * self.bw_rank_io)
+
+    def agg_write_bw(self, n_writers: int) -> float:
+        """Aggregate PFS write bandwidth `n_writers` concurrent ranks see."""
+        if self.bw_rank_io is None:
+            return self.bw_store
+        return min(self.bw_store, n_writers * self.bw_rank_io)
+
+
+# Backwards-compatible alias (pre-I/O name).
+SystemConstants = MachineSpec
 
 
 # Paper §5.1/§5.3.3 measured constants (ABCI: 4xV100 + 2xEDR per node, GPFS).
-ABCI = SystemConstants(
+ABCI = MachineSpec(
     name="abci-v100",
     bw_load=50e9, bw_store=28.5e9,
     th_flt=100.0, th_allgather=55.0,
@@ -49,7 +90,7 @@ ABCI = SystemConstants(
 # it is HBM/VMEM-bound at roughly bw_hbm / 20 B per update ~ 38 GUPS... the
 # kernel streams the volume once per 32-projection batch, so the effective
 # rate is gather-issue-bound; we use a conservative 100 GUPS/chip.
-TPU_V5E = SystemConstants(
+TPU_V5E = MachineSpec(
     name="tpu-v5e",
     bw_load=100e9, bw_store=100e9,
     th_flt=2000.0, th_allgather=400.0,
@@ -76,6 +117,23 @@ class PerfBreakdown:
     # t_compute their sum (the planner's schedule-aware cost, planner/cost.py).
     overlap: bool = True
 
+    # Planner-visible I/O terms: Eq. 8 is the PFS read of the raw
+    # projections, Eq. 16 the PFS write of the volume (the shard store's
+    # slice-per-rank files, repro/io). Named aliases so I/O is first-class
+    # in breakdown tables — t_read rides inside T_compute (the paper
+    # overlaps the load with the pipeline), t_write inside T_post.
+    @property
+    def t_read(self) -> float:                         # Eq. 8 alias
+        return self.t_load
+
+    @property
+    def t_write(self) -> float:                        # Eq. 16 alias
+        return self.t_store
+
+    @property
+    def t_io(self) -> float:
+        return self.t_read + self.t_write
+
     @property
     def t_compute(self) -> float:                      # Eq. 17
         stages = (self.t_load, self.t_flt, self.t_allgather, self.t_bp)
@@ -98,7 +156,7 @@ class PerfBreakdown:
 
 
 def predict(g: CBCTGeometry, grid: IFDKGrid,
-            sys: SystemConstants = ABCI,
+            sys: MachineSpec = ABCI,
             storage_bytes: float = 4.0) -> PerfBreakdown:
     """Eqs. 8-16 (float32 volume; projection-stream width `storage_bytes`).
 
@@ -107,6 +165,12 @@ def predict(g: CBCTGeometry, grid: IFDKGrid,
     H2D terms — the paper's FP16-texture halving of the dominant
     communication time. The default 4.0 reproduces the paper's f32 numbers
     verbatim. The volume side (BP accumulate, Reduce, store) stays f32.
+
+    I/O terms (T_read = Eq. 8, T_write = Eq. 16) price the slice-per-rank
+    shard store (repro/io): all R*C ranks read concurrently, R slab owners
+    write. With `bw_rank_io` set on the MachineSpec the effective bandwidth
+    is capped at n_concurrent * bw_rank_io (per-rank PFS links), otherwise
+    the paper's aggregate-bandwidth assumption holds verbatim.
     """
     szf = 4.0
     sp = float(storage_bytes)
@@ -116,7 +180,7 @@ def predict(g: CBCTGeometry, grid: IFDKGrid,
     proj_bytes = sp * g.n_u * g.n_v * g.n_proj
     vol_bytes = szf * g.n_x * g.n_y * g.n_z
 
-    t_load = proj_bytes / sys.bw_load                                   # Eq. 8
+    t_load = proj_bytes / sys.agg_read_bw(n_ranks)                      # Eq. 8
     t_flt = g.n_proj / (n_nodes * sys.th_flt)                           # Eq. 9
     t_allgather = (g.n_proj * (sp / szf)
                    / (c * r * sys.th_allgather))                        # Eq.10
@@ -129,7 +193,7 @@ def predict(g: CBCTGeometry, grid: IFDKGrid,
     t_reduce = vol_bytes / (r * sys.th_reduce)                          # Eq.15
     if c == 1:
         t_reduce = 0.0  # paper: no inter-rank reduction when C == 1
-    t_store = vol_bytes / sys.bw_store                                  # Eq.16
+    t_store = vol_bytes / sys.agg_write_bw(r)                           # Eq.16
     return PerfBreakdown(t_load, t_flt, t_allgather, t_h2d, t_bp,
                          t_d2h, t_reduce, t_store)
 

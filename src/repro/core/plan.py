@@ -430,7 +430,7 @@ class ReconstructionPlan:
 
         return rank_fn
 
-    def build(self) -> Callable[[Array], Array]:
+    def build(self, source=None, sink=None) -> Callable[[Array], Array]:
         """Validated, tuned, jitted reconstruction: projections -> volume.
 
         Input : (N_p, N_v, N_u) projections — sharded with
@@ -441,9 +441,18 @@ class ReconstructionPlan:
                 (N_x, y_chunks, N_y/y_chunks/C_data, N_z) store layout —
                 reshape(N_x, N_y, N_z) restores the canonical volume.
 
+        `source`/`sink` (repro/io/streams.py) close the pipeline at the
+        filesystem like the paper's ranks do: with a `ProjectionSource` the
+        returned callable may be invoked with no argument — each rank
+        scatter-reads only its own projection slice; with a `VolumeSink`
+        the sharded output volume is streamed shard-per-file to the store
+        before being returned (the slice-per-rank PFS write).
+
         Results are cached per plan, so repeated builds (and the thin
         legacy wrappers that build per call) never re-trace.
         """
+        if source is not None or sink is not None:
+            return self._build_with_io(source, sink)
         try:
             cached = _ENGINE_CACHE.get(self)
         except TypeError:  # unhashable field (exotic mesh) — build uncached
@@ -476,6 +485,28 @@ class ReconstructionPlan:
         except TypeError:
             pass
         return reconstruct_fn
+
+    def _build_with_io(self, source, sink) -> Callable:
+        """The engine with its filesystem endpoints attached: scatter-read
+        projections from `source` when none are passed, stream the sharded
+        output volume to `sink` shard-per-file. The core engine underneath
+        comes from the per-plan cache, so attaching I/O never re-traces."""
+        engine = self.build()
+
+        def reconstruct_io(projections: Optional[Array] = None) -> Array:
+            if projections is None:
+                if source is None:
+                    raise TypeError(
+                        "this plan was built without a ProjectionSource; "
+                        "pass the projections array")
+                projections = source.load(self.mesh)
+            volume = engine(projections)
+            if sink is not None:
+                jax.block_until_ready(volume)
+                sink.write(volume)
+            return volume
+
+        return reconstruct_io
 
 
 _SPEC_INT_KEYS = ("n_steps", "y_chunks", "vmem_budget")

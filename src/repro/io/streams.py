@@ -1,0 +1,90 @@
+"""Projection/volume endpoints of the reconstruction pipeline (paper Fig. 3).
+
+The paper's rank does not receive projections from the caller — it *loads*
+its N_p/(R*C) slice from the parallel filesystem, and it does not return its
+slab — it *stores* it. These two endpoints wrap the shard store
+(shard_store.py) in pipeline terms:
+
+  ProjectionSource  a raw-projection shard store feeding the plan engine's
+                    filter stage: `load(mesh)` scatter-reads exactly the
+                    shards that overlap each rank's `input_sharding(mesh)`
+                    slice (Eq. 5 load split) and returns the sharded device
+                    array the engine consumes.
+  VolumeSink        the paper's PFS store: `write(volume)` streams each
+                    rank's slab (each addressable shard of the engine's
+                    output — x over `model`, plus y over `data` with
+                    reduce="scatter") to its own file.
+
+Both are wired as optional `source=` / `sink=` stages on
+`ReconstructionPlan.build()` (core/plan.py), closing the pipeline:
+
+    src = ProjectionSource.write(dir_in, projections, chunks=(n_ranks, 1, 1))
+    fdk = plan.build(source=src, sink=VolumeSink(dir_out))
+    volume = fdk()          # load -> filter -> gather -> BP -> reduce -> store
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from . import shard_store
+
+
+class ProjectionSource:
+    """Raw projections stored shard-per-file, restorable onto any mesh."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    @classmethod
+    def write(cls, path: str, projections,
+              chunks: Optional[Sequence[int]] = None) -> "ProjectionSource":
+        """Lay projections down as a shard store. For a device array the
+        files follow its sharding; for a host array pass e.g.
+        ``chunks=(n_ranks, 1, 1)`` for the paper's slice-per-rank layout."""
+        shard_store.save_array(path, projections, chunks=chunks)
+        return cls(path)
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(shard_store.read_manifest(self.path)["shape"])
+
+    @property
+    def dtype(self) -> np.dtype:
+        return shard_store.dtype_from_name(
+            shard_store.read_manifest(self.path)["dtype"])
+
+    def load(self, mesh=None) -> jax.Array:
+        """Scatter-read the projections for `mesh` (each rank's slice of the
+        leading projection axis); the whole array on one device if None."""
+        if mesh is None:
+            return jax.device_put(shard_store.load_array(self.path))
+        from repro.core.distributed import input_sharding
+
+        return shard_store.load_array(self.path, input_sharding(mesh))
+
+
+class VolumeSink:
+    """Slice-per-rank volume store: each shard of the reconstructed volume
+    goes straight to its own file — no gather, no root writer."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def write(self, volume) -> str:
+        """Write the (sharded) volume; returns the store directory."""
+        return shard_store.save_array(self.path, volume)
+
+    def read(self, sharding=None):
+        """Read the stored volume back (host numpy, or scatter-read onto
+        `sharding`)."""
+        return shard_store.load_array(self.path, sharding)
+
+    def nbytes(self) -> int:
+        """Stored payload size (shard files only, not the manifest)."""
+        sdir = os.path.join(self.path, shard_store.SHARD_DIR)
+        return sum(os.path.getsize(os.path.join(sdir, f))
+                   for f in os.listdir(sdir))

@@ -19,7 +19,14 @@ the terms per plan point:
                                chunk), an HBM-traffic term on T_bp.
   reduce          psum (allreduce) moves ~2x the bytes of psum_scatter per
                   rank (2(C-1)/C vs (C-1)/C ring traffic) — the volume
-                  Reduce term sees the mode.
+                  Reduce term sees the mode. It also sets the PFS *writer*
+                  count for T_write (Eq. 16, the shard store's
+                  slice-per-rank files): scatter leaves the volume sharded
+                  over R x data ranks that all stream their own file, psum
+                  leaves one slab owner per row — R writers. Visible only
+                  when `MachineSpec.bw_rank_io` caps per-rank PFS links;
+                  with the paper's aggregate-bandwidth assumption both
+                  modes saturate the filesystem equally.
   impl            relative back-projection throughput factors: the reference
                   projects full (u, v, w) coordinates per voxel (~8x the
                   factorized work, Alg. 2 vs Alg. 4); the Pallas kernel's
@@ -36,7 +43,7 @@ import dataclasses
 from repro.core.distributed import IFDKGrid
 from repro.core.geometry import CBCTGeometry
 from repro.core.perf_model import (
-    ABCI, PerfBreakdown, SystemConstants, predict,
+    ABCI, MachineSpec, PerfBreakdown, predict,
 )
 from repro.core.precision import resolve_precision
 
@@ -101,8 +108,19 @@ def point_from_plan(plan) -> PlanPoint:
     )
 
 
+def io_writers(point: PlanPoint) -> int:
+    """Concurrent PFS writers of the volume under this plan: with
+    reduce="scatter" every rank of the R x data grid holds (and streams) its
+    own disjoint piece; with psum the slab is replicated across the column,
+    so one owner per row — R writers."""
+    grid = point.grid
+    if point.reduce == "scatter":
+        return grid.r * (point.data_size or grid.c)
+    return grid.r
+
+
 def predict_point(g: CBCTGeometry, point: PlanPoint,
-                  system: SystemConstants = ABCI) -> PerfBreakdown:
+                  system: MachineSpec = ABCI) -> PerfBreakdown:
     """Plan-aware Eqs. 8-19: the paper model with the plan's knobs applied."""
     prec = resolve_precision(point.precision)
     sb = float(prec.storage_bytes)
@@ -142,16 +160,24 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
         t_reduce = base.t_reduce * ring * (2.0 if point.reduce == "psum"
                                            else 1.0)
 
+    # T_write (Eq. 16) with the plan's writer count: the shard store's
+    # slice-per-rank files mean the scatter epilogue brings R*C_data
+    # concurrent writers to the PFS, psum only R. Only bites when per-rank
+    # links are the bottleneck (bw_rank_io set); under the paper's
+    # aggregate assumption base.t_store already has the R-writer price.
+    t_store = (4.0 * g.n_x * g.n_y * g.n_z
+               / system.agg_write_bw(io_writers(point)))
+
     # Overlap needs something to overlap WITH: a pipelined/chunked schedule
     # at n_steps=1 degenerates to one gather + one back-projection (the
     # engine's scan has zero steps), so Eq. 17's max only applies when the
     # stream is actually micro-batched.
     return dataclasses.replace(
-        base, t_bp=t_bp, t_reduce=t_reduce,
+        base, t_bp=t_bp, t_reduce=t_reduce, t_store=t_store,
         overlap=point.schedule != "fused" and point.n_steps > 1,
     )
 
 
-def predict_plan(plan, system: SystemConstants = ABCI) -> PerfBreakdown:
+def predict_plan(plan, system: MachineSpec = ABCI) -> PerfBreakdown:
     """Plan-aware cost of a concrete ReconstructionPlan."""
     return predict_point(plan.geometry, point_from_plan(plan), system)

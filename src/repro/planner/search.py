@@ -25,7 +25,7 @@ from typing import Iterable, Optional, Sequence
 from repro.core.distributed import IFDKGrid, grid_candidates
 from repro.core.geometry import CBCTGeometry
 from repro.core.perf_model import (
-    ABCI, PerfBreakdown, SystemConstants, gups_end_to_end,
+    ABCI, MachineSpec, PerfBreakdown, gups_end_to_end,
 )
 from repro.core.precision import resolve_precision
 
@@ -117,7 +117,7 @@ def enumerate_points(g: CBCTGeometry, grid: IFDKGrid, *,
 
 
 def _propose(g: CBCTGeometry, point: PlanPoint,
-             system: SystemConstants, hbm_bytes: int,
+             system: MachineSpec, hbm_bytes: int,
              vmem_budget: int | None, plan=None) -> PlanProposal:
     feasible, reason = check_feasible(g, point, hbm_bytes, vmem_budget)
     return PlanProposal(
@@ -127,7 +127,7 @@ def _propose(g: CBCTGeometry, point: PlanPoint,
 
 
 def search_grids(g: CBCTGeometry, n_devices: int, *,
-                 system: SystemConstants = ABCI,
+                 system: MachineSpec = ABCI,
                  hbm_bytes: int = DEFAULT_HBM_BYTES,
                  vmem_budget: int | None = None,
                  top_k: int | None = 8, include_infeasible: bool = False,
@@ -153,7 +153,7 @@ def search_grids(g: CBCTGeometry, n_devices: int, *,
 
 
 def search_plans(g: CBCTGeometry, mesh=None, *,
-                 system: SystemConstants = ABCI,
+                 system: MachineSpec = ABCI,
                  hbm_bytes: int = DEFAULT_HBM_BYTES,
                  vmem_budget: int | None = None,
                  top_k: int | None = 8, include_infeasible: bool = False,
@@ -195,7 +195,7 @@ def search_plans(g: CBCTGeometry, mesh=None, *,
 
 
 def auto_plan(g: CBCTGeometry, mesh=None, *,
-              system: SystemConstants = ABCI,
+              system: MachineSpec = ABCI,
               hbm_bytes: int = DEFAULT_HBM_BYTES,
               vmem_budget: int | None = None,
               measure: bool = False, top_k: int = 8,

@@ -1,15 +1,24 @@
 """Checkpoint I/O + fault tolerance + elastic remesh."""
+import json
+import os
+import shutil
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import (
-    CheckpointManager, latest_step, load_checkpoint, save_checkpoint,
+    CheckpointManager, StoreError, committed_steps, latest_step,
+    load_checkpoint, save_checkpoint,
 )
+from repro.parallel.mesh import single_device_mesh
 from repro.runtime import (
     ResumableReconstruction, StragglerMonitor, plan_remesh, restart_loop,
 )
+
+from tests._hyp import given, settings, st
 
 
 def _tree():
@@ -58,6 +67,175 @@ class TestCheckpointIO:
         assert steps == [3, 4]
         s, tree = mgr.restore_latest(_tree())
         assert s == 4 and tree is not None
+
+
+class TestSpecRecording:
+    """Regression for the dead `meta["spec"] is not None` guard: the old
+    writer emitted [] for EVERY unsharded leaf, so the branch was always
+    taken and host arrays were silently re-mounted with an empty
+    NamedSharding. None ("no spec recorded") and [] (a real, replicated
+    PartitionSpec) are now distinct in the manifest and on restore."""
+
+    def _manifest(self, path):
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            return json.load(f)
+
+    def test_manifest_distinguishes_none_from_empty_spec(self, tmp_path):
+        mesh = single_device_mesh()
+        t = {
+            "host": np.arange(6.0, dtype=np.float32).reshape(2, 3),
+            "default": jnp.ones((4,)),                # no NamedSharding
+            "replicated": jax.device_put(
+                jnp.ones((4,)), NamedSharding(mesh, P())),
+            "sharded": jax.device_put(
+                jnp.ones((4, 2)), NamedSharding(mesh, P("model"))),
+        }
+        p = save_checkpoint(str(tmp_path), 1, t)
+        specs = {e["key"]: e["spec"] for e in self._manifest(p)["leaves"]}
+        by = {k.strip("[']"): v for k, v in specs.items()}
+        assert by["host"] is None
+        assert by["default"] is None
+        assert by["replicated"] == []        # real spec, recorded
+        assert by["sharded"] == ["model"]
+
+    def test_restore_applies_spec_only_where_recorded(self, tmp_path):
+        mesh = single_device_mesh()
+        t = {
+            "host": np.arange(3.0, dtype=np.float32),
+            "replicated": jax.device_put(
+                jnp.ones((4,)), NamedSharding(mesh, P())),
+        }
+        save_checkpoint(str(tmp_path), 1, t)
+        out = load_checkpoint(str(tmp_path), 1, t, mesh=mesh)
+        assert isinstance(out["replicated"].sharding, NamedSharding)
+        assert not isinstance(out["host"].sharding, NamedSharding)
+        np.testing.assert_array_equal(np.asarray(out["host"]), t["host"])
+
+    def test_async_manager_snapshot_keeps_spec(self, tmp_path):
+        """The background writer snapshots shard-by-shard, so the spec
+        survives the host round-trip (the old manager flattened everything
+        to plain numpy and lost it)."""
+        mesh = single_device_mesh()
+        t = {"w": jax.device_put(jnp.arange(8.0).reshape(4, 2),
+                                 NamedSharding(mesh, P("model")))}
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, t, blocking=False)
+        mgr.wait()
+        p = os.path.join(str(tmp_path), "step_00000001")
+        specs = [e["spec"] for e in self._manifest(p)["leaves"]]
+        assert specs == [["model"]]
+        step, out = mgr.restore_latest(t, mesh=mesh)
+        assert step == 1
+        assert isinstance(out["w"].sharding, NamedSharding)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(t["w"]))
+
+
+class TestOrphanedTmpSweep:
+    def _seed_tmp(self, directory, step=5):
+        tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+        os.makedirs(os.path.join(tmp, "leaves", "leaf_99999"))
+        with open(os.path.join(tmp, "leaves", "leaf_99999", "junk.bin"),
+                  "w") as f:
+            f.write("crashed writer leftovers")
+        return tmp
+
+    def test_manager_init_sweeps_orphans(self, tmp_path):
+        tmp = self._seed_tmp(str(tmp_path))
+        CheckpointManager(str(tmp_path))
+        assert not os.path.exists(tmp)
+
+    def test_gc_sweeps_orphans(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tmp = self._seed_tmp(str(tmp_path), step=9)
+        mgr.save(1, _tree(), blocking=True)
+        assert not os.path.exists(tmp)
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_stale_tmp_does_not_shadow_later_save(self, tmp_path):
+        """A crashed writer's tmp dir for step N must not leak its files
+        into a later successful save of the same step."""
+        self._seed_tmp(str(tmp_path), step=5)
+        save_checkpoint(str(tmp_path), 5, _tree())
+        leaves = os.listdir(
+            os.path.join(str(tmp_path), "step_00000005", "leaves"))
+        assert "leaf_99999" not in leaves
+        out = load_checkpoint(str(tmp_path), 5, _tree())
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(_tree()["w"]))
+
+
+class TestCorruptionHandling:
+    """Truncated shard, gutted manifest and missing commit marker each fail
+    loudly, and restore_latest falls back to the newest committed step that
+    still loads."""
+
+    def _corrupt(self, directory, step, kind):
+        path = os.path.join(directory, f"step_{step:08d}")
+        if kind == "truncated_shard":
+            leaf = os.path.join(path, "leaves", "leaf_00000")
+            shard = os.path.join(leaf, "shards", "shard_00000.bin")
+            with open(shard, "r+b") as f:
+                f.truncate(3)
+        elif kind == "missing_manifest_entry":
+            leaf = os.path.join(path, "leaves", "leaf_00000")
+            mpath = os.path.join(leaf, "MANIFEST.json")
+            with open(mpath) as f:
+                m = json.load(f)
+            m["shards"] = []
+            with open(mpath, "w") as f:
+                json.dump(m, f)
+        elif kind == "missing_commit":
+            os.remove(os.path.join(path, ".COMMITTED"))
+        else:
+            raise AssertionError(kind)
+
+    @settings(max_examples=10, deadline=None)
+    @given(kind=st.sampled_from(["truncated_shard", "missing_manifest_entry",
+                                 "missing_commit"]))
+    def test_corruption_raises_and_restore_falls_back(self, tmp_path, kind):
+        d = str(tmp_path)
+        mgr = CheckpointManager(d)
+        mgr.save(1, _tree(), blocking=True)
+        mgr.save(2, _tree(), blocking=True)
+        self._corrupt(d, 2, kind)
+        if kind == "missing_commit":
+            assert latest_step(d) == 1       # uncommitted is invisible
+        else:
+            assert latest_step(d) == 2       # committed but unreadable
+        with pytest.raises(StoreError):
+            load_checkpoint(d, 2, _tree())
+        step, tree = mgr.restore_latest(_tree())
+        assert step == 1 and tree is not None
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.asarray(_tree()["w"]))
+
+    def test_error_messages_name_the_problem(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _tree())
+        self._corrupt(d, 1, "truncated_shard")
+        with pytest.raises(StoreError, match="truncated"):
+            load_checkpoint(d, 1, _tree())
+        save_checkpoint(d, 2, _tree())
+        self._corrupt(d, 2, "missing_commit")
+        with pytest.raises(StoreError, match="uncommitted"):
+            load_checkpoint(d, 2, _tree())
+
+    def test_nothing_loadable_returns_none_with_warning(self, tmp_path):
+        d = str(tmp_path)
+        mgr = CheckpointManager(d)
+        mgr.save(1, _tree(), blocking=True)
+        self._corrupt(d, 1, "truncated_shard")
+        with pytest.warns(RuntimeWarning, match="no committed checkpoint"):
+            step, tree = mgr.restore_latest(_tree())
+        assert step is None and tree is None
+
+    def test_committed_steps_lists_only_committed(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _tree())
+        save_checkpoint(d, 3, _tree())
+        self._corrupt(d, 3, "missing_commit")
+        assert committed_steps(d) == [1]
 
 
 class TestFaultTolerance:

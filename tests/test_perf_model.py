@@ -3,7 +3,9 @@ import pytest
 
 from repro.core.distributed import IFDKGrid
 from repro.core.geometry import paper_geometry as paper_problem
-from repro.core.perf_model import ABCI, TPU_V5E, gups_end_to_end, predict
+from repro.core.perf_model import (
+    ABCI, TPU_V5E, MachineSpec, SystemConstants, gups_end_to_end, predict,
+)
 
 
 class TestPerfModel:
@@ -99,6 +101,71 @@ class TestMonotonicity:
         grid = IFDKGrid(r=32, c=8)
         assert predict(g, grid, ABCI) == predict(g, grid, ABCI,
                                                  storage_bytes=4.0)
+
+
+class TestIOTerms:
+    """T_read/T_write: the planner-visible I/O terms (Eq. 8/16) and the PFS
+    bandwidth knobs (`MachineSpec.with_pfs`) they respond to."""
+
+    def test_machinespec_is_the_old_systemconstants(self):
+        assert SystemConstants is MachineSpec
+        assert isinstance(ABCI, MachineSpec)
+
+    def test_read_write_alias_the_eq8_eq16_terms(self):
+        g = paper_problem()
+        b = predict(g, IFDKGrid(r=32, c=8), ABCI)
+        assert b.t_read == b.t_load
+        assert b.t_write == b.t_store
+        assert b.t_io == pytest.approx(b.t_read + b.t_write)
+
+    def test_with_pfs_only_touches_io(self):
+        """Monotonicity-suite anchor: throttling the PFS must move ONLY the
+        I/O terms, and move them inversely to bandwidth."""
+        g = paper_problem()
+        grid = IFDKGrid(r=32, c=8)
+        base = predict(g, grid, ABCI)
+        prev_read, prev_write = base.t_read, base.t_write
+        for f in (2.0, 8.0, 64.0):
+            b = predict(g, grid, ABCI.with_pfs(read=ABCI.bw_load / f,
+                                               write=ABCI.bw_store / f))
+            assert b.t_read == pytest.approx(base.t_read * f)
+            assert b.t_write == pytest.approx(base.t_write * f)
+            assert b.t_read > prev_read and b.t_write > prev_write
+            assert b.t_runtime > base.t_runtime
+            # the non-I/O terms are untouched
+            assert b.t_flt == base.t_flt
+            assert b.t_allgather == base.t_allgather
+            assert b.t_bp == base.t_bp
+            assert b.t_reduce == base.t_reduce
+            prev_read, prev_write = b.t_read, b.t_write
+
+    def test_rank_io_cap_binds_few_ranks_not_many(self):
+        """Per-rank PFS links: few concurrent ranks are link-bound, many
+        saturate the filesystem aggregate (the slice-per-rank store's
+        scaling argument)."""
+        sys = ABCI.with_pfs(rank_io=1e9)
+        # few readers: capped below aggregate
+        assert sys.agg_read_bw(4) == pytest.approx(4e9)
+        # many readers: the aggregate wins
+        assert sys.agg_read_bw(256) == pytest.approx(ABCI.bw_load)
+        assert sys.agg_write_bw(8) == pytest.approx(8e9)
+        assert sys.agg_write_bw(256) == pytest.approx(ABCI.bw_store)
+
+    def test_rank_io_cap_preserves_rank_monotonicity(self):
+        """More ranks never increases T_compute, capped or not (the
+        monotonicity property the planner's ranking rests on)."""
+        g = paper_problem()
+        sys = ABCI.with_pfs(rank_io=2e9)
+        for r in (8, 32):
+            seq = [predict(g, IFDKGrid(r=r, c=c), sys).t_compute
+                   for c in (1, 2, 4, 8, 16)]
+            assert all(x >= y for x, y in zip(seq, seq[1:])), (r, seq)
+
+    def test_uncapped_rank_io_matches_paper_model(self):
+        g = paper_problem()
+        grid = IFDKGrid(r=32, c=8)
+        assert predict(g, grid, ABCI.with_pfs(rank_io=1e30)) == \
+            predict(g, grid, ABCI)
 
 
 class TestPinnedPaperProjection:

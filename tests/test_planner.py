@@ -109,6 +109,60 @@ class TestCost:
         assert predict_plan(plan) == predict_point(g, point_from_plan(plan))
 
 
+class TestIOCost:
+    """T_read/T_write in the plan-aware model: the slice-per-rank store's
+    writer count and the PFS throttling the with-I/O ranking responds to."""
+
+    def test_io_writers_counts_the_stores_concurrency(self):
+        from repro.planner.cost import io_writers
+        assert io_writers(PlanPoint(grid=GRID_256, reduce="psum")) == 32
+        assert io_writers(PlanPoint(grid=GRID_256, reduce="scatter")) == 256
+        assert io_writers(PlanPoint(grid=GRID_256, reduce="scatter",
+                                    data_size=4)) == 128
+
+    def test_scatter_store_outwrites_psum_under_rank_io_cap(self):
+        """With per-rank PFS links the bottleneck, the parallel store
+        (scatter: R x C writers) beats the replicated slab's R writers —
+        the paper's reason for the slice-per-rank layout."""
+        g = paper_problem()
+        sys = ABCI.with_pfs(rank_io=50e6)
+        ps = predict_point(g, PlanPoint(grid=GRID_256, reduce="psum"), sys)
+        sc = predict_point(g, PlanPoint(grid=GRID_256, reduce="scatter"),
+                           sys)
+        assert sc.t_write < ps.t_write
+        # uncapped (the paper's aggregate assumption): no difference
+        ps0 = predict_point(g, PlanPoint(grid=GRID_256, reduce="psum"))
+        sc0 = predict_point(g, PlanPoint(grid=GRID_256, reduce="scatter"))
+        assert ps0.t_write == pytest.approx(sc0.t_write)
+
+    def test_pfs_throttle_changes_auto_ranking(self):
+        """The acceptance regression: throttling PFS read bandwidth flips
+        the ranked search's winner — the planner ranks WITH I/O."""
+        g = paper_problem()
+        fast = search_grids(g, 256, system=ABCI, top_k=1)[0]
+        slow = search_grids(g, 256,
+                            system=ABCI.with_pfs(read=ABCI.bw_load / 200),
+                            top_k=1)[0]
+        assert (fast.point.grid, fast.spec()) != (slow.point.grid,
+                                                  slow.spec())
+        # under the throttle the winner is read-bound: Eq. 17's max is the
+        # load term, so the ranking literally hinges on T_read
+        assert slow.breakdown.t_compute == pytest.approx(
+            slow.breakdown.t_read)
+        assert slow.breakdown.t_read > fast.breakdown.t_read
+
+    def test_rank_io_throttle_flips_reduce_mode_preference(self):
+        """psum wins the tie-break when writes are free; capping per-rank
+        links makes the parallel store's extra writers decisive."""
+        g = paper_problem()
+        points = [PlanPoint(grid=GRID_256, schedule="pipelined", n_steps=4,
+                            precision="bf16", reduce=r)
+                  for r in ("psum", "scatter")]
+        sys = ABCI.with_pfs(rank_io=50e6)
+        t = {p.reduce: predict_point(g, p, sys).t_runtime for p in points}
+        assert t["scatter"] < t["psum"]
+
+
 # ---------------------------------------------------------------------------
 # feasibility.py: per-device memory model
 # ---------------------------------------------------------------------------

@@ -1,0 +1,238 @@
+"""Shard-level array store (repro/io): layout, scatter reads, corruption.
+
+The multi-device behaviours (one file per addressable shard, elastic
+8 -> 4 restore) live in tests/test_shard_io_distributed.py; this module
+covers everything observable on one device — including the file-open
+accounting of region reads, which needs no mesh because `read_region`
+takes global coordinates directly.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.io import (
+    ProjectionSource, StoreError, VolumeSink, load_array, open_count,
+    read_manifest, read_region, reset_open_count, save_array, snapshot,
+    stored_spec,
+)
+from repro.io.shard_store import HostShardedArray
+from repro.parallel.mesh import single_device_mesh
+
+from tests._hyp import given, settings, st
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("value", [
+        np.arange(24.0, dtype=np.float32).reshape(4, 6),
+        np.arange(8, dtype=np.int64),
+        np.int64(7),                       # 0-d host scalar
+        jnp.float32(3.5),                  # 0-d device scalar
+    ], ids=["f32-2d", "i64-1d", "host-scalar", "dev-scalar"])
+    def test_bit_exact(self, tmp_path, value):
+        path = str(tmp_path / "a")
+        save_array(path, value)
+        out = load_array(path)
+        assert out.shape == np.shape(value)
+        assert out.dtype == np.asarray(value).dtype
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(value))
+
+    def test_bf16_storage_dtype_survives(self, tmp_path):
+        """Raw-bytes shard files round-trip the ml_dtypes storage types
+        numpy's .npy format cannot represent."""
+        arr = (jnp.arange(12.0).reshape(3, 4) * 0.25).astype(jnp.bfloat16)
+        path = str(tmp_path / "bf16")
+        save_array(path, arr)
+        assert read_manifest(path)["dtype"] == "bfloat16"
+        out = load_array(path)
+        assert out.dtype == jnp.bfloat16.dtype
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(arr))
+
+    def test_chunked_host_write_one_file_per_chunk(self, tmp_path):
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        path = str(tmp_path / "a")
+        save_array(path, a, chunks=(2, 2))
+        files = sorted(os.listdir(os.path.join(path, "shards")))
+        assert len(files) == 4
+        np.testing.assert_array_equal(load_array(path), a)
+
+    def test_save_clears_stale_store(self, tmp_path):
+        path = str(tmp_path / "a")
+        save_array(path, np.zeros((8, 8), np.float32), chunks=(4, 1))
+        save_array(path, np.ones((4, 4), np.float32))  # smaller, 1 shard
+        assert len(os.listdir(os.path.join(path, "shards"))) == 1
+        np.testing.assert_array_equal(load_array(path),
+                                      np.ones((4, 4), np.float32))
+
+    def test_bad_chunks_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="chunks"):
+            save_array(str(tmp_path / "a"), np.zeros((8, 8)), chunks=(3, 1))
+        with pytest.raises(ValueError, match="chunks"):
+            save_array(str(tmp_path / "a"), np.zeros((8, 8)), chunks=(2,))
+
+
+class TestScatterRead:
+    def _store(self, tmp_path):
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        path = str(tmp_path / "a")
+        save_array(path, a, chunks=(2, 2))  # 4 files of 4x4
+        return path, a
+
+    def test_region_opens_only_intersecting_files(self, tmp_path):
+        path, a = self._store(tmp_path)
+        reset_open_count()
+        out = read_region(path, (slice(0, 4), slice(0, 4)))
+        assert open_count() == 1            # one quadrant -> one file
+        np.testing.assert_array_equal(out, a[:4, :4])
+        reset_open_count()
+        out = read_region(path, (slice(2, 6), slice(0, 8)))
+        assert open_count() == 4            # straddles every quadrant
+        np.testing.assert_array_equal(out, a[2:6, :])
+        reset_open_count()
+        out = read_region(path, (slice(5, 7), slice(1, 6)))
+        assert open_count() == 2            # bottom two quadrants only
+        np.testing.assert_array_equal(out, a[5:7, 1:6])
+
+    def test_full_load_opens_every_file_once(self, tmp_path):
+        path, a = self._store(tmp_path)
+        reset_open_count()
+        np.testing.assert_array_equal(load_array(path), a)
+        assert open_count() == 4
+
+    def test_load_onto_sharding_resharding(self, tmp_path):
+        """Restore a host-chunked store onto a mesh sharding the writer
+        never saw (reshard-on-restore, single-device edition)."""
+        path, a = self._store(tmp_path)
+        mesh = single_device_mesh()
+        out = load_array(path, NamedSharding(mesh, P("model")))
+        assert isinstance(out, jax.Array)
+        assert isinstance(out.sharding, NamedSharding)
+        np.testing.assert_array_equal(np.asarray(out), a)
+
+    def test_snapshot_roundtrip_keeps_spec(self, tmp_path):
+        mesh = single_device_mesh()
+        arr = jax.device_put(jnp.arange(16.0).reshape(4, 4),
+                             NamedSharding(mesh, P("model")))
+        snap = snapshot(arr)
+        assert isinstance(snap, HostShardedArray)
+        assert snap.spec == ["model"]
+        path = str(tmp_path / "s")
+        save_array(path, snap)
+        assert stored_spec(path) == P("model")
+        np.testing.assert_array_equal(load_array(path), np.asarray(arr))
+
+    def test_snapshot_of_host_value_is_numpy(self):
+        snap = snapshot(np.int64(3))
+        assert isinstance(snap, np.ndarray) and snap.shape == ()
+
+    def test_spec_none_vs_empty_distinguished(self, tmp_path):
+        """A replicated NamedSharding records spec [] (a REAL, empty
+        PartitionSpec); a host array records None (no spec at all)."""
+        mesh = single_device_mesh()
+        rep = jax.device_put(jnp.ones((3,)), NamedSharding(mesh, P()))
+        save_array(str(tmp_path / "rep"), rep)
+        save_array(str(tmp_path / "host"), np.ones((3,), np.float32))
+        assert read_manifest(str(tmp_path / "rep"))["spec"] == []
+        assert read_manifest(str(tmp_path / "host"))["spec"] is None
+        assert stored_spec(str(tmp_path / "rep")) == P()
+        assert stored_spec(str(tmp_path / "host")) is None
+
+
+class TestCorruption:
+    def _store(self, tmp_path):
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        path = str(tmp_path / "a")
+        save_array(path, a, chunks=(2, 2))
+        return path, a
+
+    @settings(max_examples=10, deadline=None)
+    @given(kind=st.sampled_from(["truncate", "delete_file", "drop_entry",
+                                 "no_manifest"]))
+    def test_each_corruption_raises_store_error(self, tmp_path, kind):
+        path, _ = self._store(tmp_path)
+        shard0 = os.path.join(path, "shards", "shard_00000.bin")
+        if kind == "truncate":
+            with open(shard0, "r+b") as f:
+                f.truncate(10)
+            match = "truncated"
+        elif kind == "delete_file":
+            os.remove(shard0)
+            match = "missing shard file"
+        elif kind == "drop_entry":
+            mpath = os.path.join(path, "MANIFEST.json")
+            with open(mpath) as f:
+                m = json.load(f)
+            del m["shards"][0]
+            with open(mpath, "w") as f:
+                json.dump(m, f)
+            match = "does not cover"
+        else:  # no_manifest
+            os.remove(os.path.join(path, "MANIFEST.json"))
+            match = "missing MANIFEST"
+        with pytest.raises(StoreError, match=match):
+            load_array(path)
+
+    def test_intact_region_readable_despite_distant_corruption(self,
+                                                               tmp_path):
+        """Scatter reads only open what they need: corruption in one
+        quadrant leaves the others readable."""
+        path, a = self._store(tmp_path)
+        with open(os.path.join(path, "shards", "shard_00003.bin"),
+                  "r+b") as f:
+            f.truncate(3)
+        np.testing.assert_array_equal(
+            read_region(path, (slice(0, 4), slice(0, 4))), a[:4, :4])
+        with pytest.raises(StoreError, match="truncated"):
+            read_region(path, (slice(4, 8), slice(4, 8)))
+
+
+class TestStreams:
+    def test_projection_source_shape_dtype_and_load(self, tmp_path):
+        proj = np.random.default_rng(0).standard_normal(
+            (8, 4, 6)).astype(np.float32)
+        src = ProjectionSource.write(str(tmp_path / "proj"), proj,
+                                     chunks=(4, 1, 1))
+        assert src.shape == (8, 4, 6)
+        assert src.dtype == np.float32
+        np.testing.assert_array_equal(np.asarray(src.load()), proj)
+        mesh = single_device_mesh()
+        out = src.load(mesh)
+        assert isinstance(out.sharding, NamedSharding)
+        np.testing.assert_array_equal(np.asarray(out), proj)
+
+    def test_volume_sink_write_read_nbytes(self, tmp_path):
+        vol = np.arange(4 * 4 * 2, dtype=np.float32).reshape(4, 4, 2)
+        sink = VolumeSink(str(tmp_path / "vol"))
+        assert sink.write(vol) == str(tmp_path / "vol")
+        np.testing.assert_array_equal(sink.read(), vol)
+        assert sink.nbytes() == vol.nbytes
+
+    def test_plan_build_with_source_and_sink_matches_engine(self, tmp_path):
+        from repro.core.geometry import default_geometry
+        from repro.core.phantom import forward_project
+        from repro.core.plan import ReconstructionPlan
+
+        g = default_geometry(16, n_proj=32)
+        proj = forward_project(g)
+        plan = ReconstructionPlan(geometry=g)
+        ref = np.asarray(plan.build()(proj))
+        src = ProjectionSource.write(str(tmp_path / "p"), np.asarray(proj),
+                                     chunks=(8, 1, 1))
+        sink = VolumeSink(str(tmp_path / "v"))
+        fdk = plan.build(source=src, sink=sink)
+        vol = np.asarray(fdk())                 # argument-free: streams in
+        np.testing.assert_array_equal(vol, ref)
+        np.testing.assert_array_equal(sink.read(), vol)  # and streams out
+
+    def test_plan_build_without_source_needs_projections(self):
+        from repro.core.geometry import default_geometry
+        from repro.core.plan import ReconstructionPlan
+
+        plan = ReconstructionPlan(geometry=default_geometry(16, n_proj=32))
+        fdk = plan.build(sink=VolumeSink("/nonexistent"))
+        with pytest.raises(TypeError, match="ProjectionSource"):
+            fdk()
