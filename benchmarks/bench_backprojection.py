@@ -7,7 +7,8 @@ beats the reference Alg. 2 ("RTK-32") via the 1/6 coordinate-cost reduction
 and the transposed layout. Host-device copies are excluded, as in the paper.
 
 CLI (python benchmarks/bench_backprojection.py):
-  --dtype {fp32,bf16,fp16}   storage dtype of the projection stream; the
+  --dtype {fp32,bf16,fp16,fp8_e4m3}
+                             stream codec of the projection stream; the
                              report compares it against fp32 and shows the
                              VMEM-tuned vs naive-default block shapes.
   --budget BYTES             VMEM budget handed to the autotuner.
@@ -111,20 +112,21 @@ def run_precision(dtype_name: str = "fp16", iters: int = 2,
         g = _case_geometry(n_det, n_proj, n_out)
         pm = jnp.asarray(projection_matrices(g))
         q32 = jnp.asarray(rng.normal(size=g.proj_shape()), jnp.float32)
-        q_lp = q32.astype(prec.storage_dtype)
+        # the stream codec's wire format (scaled codecs carry a sidecar)
+        q_lp, sc_lp = prec.codec.encode(q32)
         case = f"precision/{n_det}^2x{n_proj}->{n_out}^3"
 
-        variants = [("fp32", q32)]
+        variants = [("fp32", q32, None)]
         if prec.storage != "fp32":
-            variants.append((prec.storage, q_lp))
-        for tag, q in variants:
+            variants.append((prec.storage, q_lp, sc_lp))
+        for tag, q, sc in variants:
             cfg = tune.autotune(g.n_x, g.n_y, g.n_z, g.n_proj, g.n_u, g.n_v,
                                 qt_dtype=q.dtype, budget=budget, measure=True)
             assert cfg.vmem <= budget, (cfg, budget)
             dt = _time(
                 lambda: backproject_pallas(
                     pm, q, g.n_x, g.n_y, g.n_z,
-                    bi=cfg.bi, bj=cfg.bj, bs=cfg.bs,
+                    bi=cfg.bi, bj=cfg.bj, bs=cfg.bs, scales=sc,
                 ),
                 iters,
             )
@@ -138,7 +140,8 @@ def run_precision(dtype_name: str = "fp16", iters: int = 2,
               _naive_block(g.n_proj))
         dt = _time(
             lambda: backproject_pallas(pm, q_lp, g.n_x, g.n_y, g.n_z,
-                                       bi=nb[0], bj=nb[1], bs=nb[2]),
+                                       bi=nb[0], bj=nb[1], bs=nb[2],
+                                       scales=sc_lp),
             iters,
         )
         rows.append((
@@ -151,7 +154,7 @@ def run_precision(dtype_name: str = "fp16", iters: int = 2,
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dtype", default="fp16",
-                    choices=["fp32", "bf16", "fp16"],
+                    choices=["fp32", "bf16", "fp16", "fp8_e4m3"],
                     help="storage dtype of the projection stream")
     ap.add_argument("--budget", type=int, default=None,
                     help="VMEM budget in bytes (default REPRO_BP_VMEM_BUDGET)")

@@ -6,8 +6,11 @@ the performance-model projection of the paper's three output sizes
 
 The measured rows are driven by the plan/engine layer: `plan_spec` (the
 driver's ``--plan`` flag) selects any point of the schedule x reduce x
-precision x impl cross-product with one string, e.g.
-``"schedule=pipelined,n_steps=2,precision=bf16"``.
+precision x impl cross-product with one string — including the stream-codec
+tokens, e.g. ``"precision=fp8_e4m3,reduce=scatter_bf16"`` — and each
+measured row reports the wire GB its two collectives move (AllGather of the
+encoded projection stream vs the volume Reduce), so codec choices show up
+as communication volume next to the wall clock.
 """
 from __future__ import annotations
 
@@ -19,6 +22,17 @@ from repro.core.geometry import default_geometry, paper_geometry
 from repro.core.perf_model import ABCI, gups_end_to_end, predict
 from repro.core.phantom import forward_project
 from repro.core.plan import plan_from_spec
+from repro.planner.cost import (
+    allgather_wire_bytes, point_from_plan, reduce_wire_bytes,
+)
+
+
+def _wire_note(plan) -> str:
+    """ag/rd wire GB of a built plan (0 on a 1x1 grid — nothing moves)."""
+    g = plan.geometry
+    pt = point_from_plan(plan)
+    return (f"ag={allgather_wire_bytes(g, pt) / 1e9:.3f}GB "
+            f"rd={reduce_wire_bytes(g, pt) / 1e9:.3f}GB")
 
 
 def run(iters: int = 2, fast: bool = False, plan_spec: str | None = None):
@@ -38,14 +52,20 @@ def run(iters: int = 2, fast: bool = False, plan_spec: str | None = None):
             tag = f"{d['schedule']}/{d['impl']}/{d['precision']}"
             rows.append((
                 f"fig6/measured/{n}^3x{npj}/{tag}", dt * 1e6,
-                f"{gups(g, dt):.3f}GUPS",
+                f"{gups(g, dt):.3f}GUPS {_wire_note(plan)}",
             ))
-    # projected (paper scale, paper constants)
+    # projected (paper scale, paper constants) — wire GB per stage from the
+    # same cost helpers the planner ranks with
+    from repro.planner.cost import PlanPoint
     for n_out, r, c in [(2048, 4, 4), (4096, 32, 8), (8192, 256, 8)]:
         g = paper_geometry(n_out)
-        b = predict(g, IFDKGrid(r=r, c=c), ABCI)
+        grid = IFDKGrid(r=r, c=c)
+        b = predict(g, grid, ABCI)
+        pt = PlanPoint(grid=grid)
         rows.append((
             f"fig6/projected/{n_out}^3/{r * c}gpus", b.t_runtime * 1e6,
-            f"{gups_end_to_end(g, b):.0f}GUPS",
+            f"{gups_end_to_end(g, b):.0f}GUPS "
+            f"ag={allgather_wire_bytes(g, pt) / 1e9:.0f}GB "
+            f"rd={reduce_wire_bytes(g, pt) / 1e9:.0f}GB",
         ))
     return rows

@@ -19,6 +19,7 @@ import argparse
 from repro.core.geometry import default_geometry, paper_geometry
 from repro.core.perf_model import ABCI, TPU_V5E
 from repro.planner import search_grids, search_plans
+from repro.planner.cost import allgather_wire_bytes, reduce_wire_bytes
 from repro.planner.measure import refine
 
 _SYSTEMS = {"abci": ABCI, "tpu": TPU_V5E}
@@ -35,12 +36,19 @@ def _fmt_row(i, p, g):
     stat = "ok" if p.feasible else f"INFEASIBLE ({p.reason})"
     cols = [
         f"{i:>2}", f"{pt.grid.r}x{pt.grid.c}", f"{sched:<14}",
-        f"{pt.reduce:<7}", f"{pt.precision:<4}", f"{pt.impl:<10}",
+        f"{pt.reduce:<12}", f"{pt.precision:<8}", f"{pt.impl:<10}",
         f"{b.t_read:7.2f}", f"{b.t_flt:7.2f}", f"{b.t_allgather:7.2f}",
         f"{b.t_bp:7.2f}", f"{b.t_compute:7.2f}", f"{b.t_write:7.2f}",
         f"{b.t_post:7.2f}", f"{b.t_runtime:8.2f}",
         f"{p.predicted_gups(g):9.1f}",
         f"{p.footprint.total / 2**30:6.2f}",
+        # Wire GB the two collectives actually move under this plan's
+        # stream codec / reduce mode (the communication-volume story the
+        # codec layer exists for): fp8 quarters ag_GB, scatter_bf16 halves
+        # rd_GB — visible next to the time columns so ranking flips under
+        # --pfs/--rank-io throttles are explainable.
+        f"{allgather_wire_bytes(g, pt) / 1e9:8.1f}",
+        f"{reduce_wire_bytes(g, pt) / 1e9:8.1f}",
     ]
     if p.measured is not None:
         cols.append(f"meas={p.measured:.3f}s")
@@ -48,9 +56,9 @@ def _fmt_row(i, p, g):
     return "  ".join(cols)
 
 
-_HEADER = ("  #  RxC    schedule        reduce   prec  impl         t_read"
-           "   t_flt    t_ag     t_bp   t_cmp   t_wr     t_post     t_run"
-           "      GUPS    GiB  status")
+_HEADER = ("  #  RxC    schedule        reduce        prec      impl      "
+           "   t_read   t_flt    t_ag     t_bp   t_cmp   t_wr     t_post"
+           "     t_run      GUPS    GiB     ag_GB    rd_GB  status")
 
 
 def main(argv=None) -> None:
@@ -78,6 +86,14 @@ def main(argv=None) -> None:
                          "few-writer plans (psum) price worse than the "
                          "slice-per-rank store (scatter)")
     ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--precision", action="append", default=None,
+                    metavar="TOK",
+                    help="restrict the precision axis (repeatable): fp32, "
+                         "bf16, fp16, fp8_e4m3")
+    ap.add_argument("--reduce", action="append", default=None,
+                    metavar="TOK",
+                    help="restrict the reduce axis (repeatable): psum, "
+                         "scatter, scatter_bf16")
     ap.add_argument("--all", action="store_true",
                     help="include infeasible candidates in the table")
     ap.add_argument("--local", action="store_true",
@@ -104,18 +120,23 @@ def main(argv=None) -> None:
                else args.pfs_write_gbs * 1e9),
         rank_io=None if args.rank_io_gbs is None else args.rank_io_gbs * 1e9)
     hbm = int(args.hbm_gib * 2**30)
+    axes = {}
+    if args.precision:
+        axes["precisions"] = tuple(args.precision)
+    if args.reduce:
+        axes["reduces"] = tuple(args.reduce)
     if args.local:
         g = default_geometry(32, n_proj=64)
         proposals = search_plans(
             g, None, system=system, hbm_bytes=hbm, top_k=args.top_k,
-            include_infeasible=args.all)
+            include_infeasible=args.all, **axes)
         if args.measure:
             proposals = refine(g, proposals)
     else:
         g = paper_geometry(args.n, args.n_proj, args.detector)
         proposals = search_grids(
             g, args.devices, system=system, hbm_bytes=hbm,
-            top_k=args.top_k, include_infeasible=args.all)
+            top_k=args.top_k, include_infeasible=args.all, **axes)
 
     print(f"plan search: {g.n_u}x{g.n_v} x {g.n_proj} proj -> {g.n_x}^3, "
           f"{args.devices if not args.local else 'local'} ranks, "

@@ -73,12 +73,29 @@ def bilinear_gather(img: Array, rows: Array, cols: Array) -> Array:
 # Reference: paper Algorithm 2 (as implemented by RTK / RabbitCT)
 # ---------------------------------------------------------------------------
 
+def _stream_scales(proj: Array, scales: Array | None) -> Array:
+    """Per-projection decode factors: the codec sidecar, or exact ones.
+
+    Every back-projector folds the stream codec's per-projection scale into
+    the accumulation weight (``w * s``) — by linearity of the bilinear
+    gather this equals decoding the projection up front, without ever
+    materializing the f32 stream. ``scales=None`` (scale-free codecs)
+    multiplies by exact 1.0f, which is bit-transparent.
+    """
+    if scales is None:
+        return jnp.ones((proj.shape[0],), jnp.float32)
+    return scales.astype(jnp.float32)
+
+
 @partial(jax.jit, static_argnames=("nx", "ny", "nz"))
 def backproject_reference(pmats: Array, proj: Array,
-                          nx: int, ny: int, nz: int) -> Array:
+                          nx: int, ny: int, nz: int,
+                          scales: Array | None = None) -> Array:
     """Alg. 2: for each projection s, 3 inner products per voxel.
 
-    pmats: (N_p, 3, 4) float32; proj: (N_p, N_v, N_u) filtered projections.
+    pmats: (N_p, 3, 4) float32; proj: (N_p, N_v, N_u) filtered projections
+    in any wire dtype (fp32/bf16/fp16/fp8 — the stream codec's output);
+    `scales` is the codec's per-projection sidecar (None = unscaled).
     Returns volume (nx, ny, nz), *unscaled* (see fdk.fdk_scale).
     """
     i = jnp.arange(nx, dtype=jnp.float32)[:, None, None]
@@ -86,19 +103,20 @@ def backproject_reference(pmats: Array, proj: Array,
     k = jnp.arange(nz, dtype=jnp.float32)[None, None, :]
 
     def body(acc, sp):
-        p, q = sp
+        p, q, s = sp
         x = p[0, 0] * i + p[0, 1] * j + p[0, 2] * k + p[0, 3]
         y = p[1, 0] * i + p[1, 1] * j + p[1, 2] * k + p[1, 3]
         z = p[2, 0] * i + p[2, 1] * j + p[2, 2] * k + p[2, 3]
         f = 1.0 / z
         u = x * f
         v = y * f
-        w = f * f
+        w = f * f * s                   # codec decode folded into the weight
         acc = acc + w * bilinear_gather(q, v, u)  # rows = v, cols = u
         return acc, None
 
     init = jnp.zeros((nx, ny, nz), jnp.float32)
-    vol, _ = jax.lax.scan(body, init, (pmats, proj))
+    vol, _ = jax.lax.scan(body, init,
+                          (pmats, proj, _stream_scales(proj, scales)))
     return vol
 
 
@@ -123,7 +141,8 @@ def column_terms(p: Array, nx: int, ny: int) -> Tuple[Array, Array, Array, Array
 
 @partial(jax.jit, static_argnames=("nx", "ny", "nz"))
 def backproject_factorized(pmats: Array, proj: Array,
-                           nx: int, ny: int, nz: int) -> Array:
+                           nx: int, ny: int, nz: int,
+                           scales: Array | None = None) -> Array:
     """Alg. 4: factorized coordinates + Z-symmetry + transposed layout.
 
     Matches backproject_reference to float32 reassociation tolerance whenever
@@ -143,9 +162,10 @@ def backproject_factorized(pmats: Array, proj: Array,
 
     def body(acc, sp):
         acc_f, acc_b = acc
-        p, q = sp
+        p, q, s = sp
         qt = q.T  # \tilde{Q}: (N_u, N_v), v contiguous
         u, w, y0, dy, f = column_terms(p, nx, ny)
+        w = w * s                       # codec decode folded into the weight
         v = (y0[..., None] + dy * k) * f[..., None]        # (nx, ny, nzh)
         ub = jnp.broadcast_to(u[..., None], v.shape)
         front = w[..., None] * bilinear_gather(qt, ub, v)   # rows=u, cols=v
@@ -154,7 +174,8 @@ def backproject_factorized(pmats: Array, proj: Array,
         return (acc_f + front, acc_b + back), None
 
     zeros = jnp.zeros((nx, ny, nzh), jnp.float32)
-    (acc_f, acc_b), _ = jax.lax.scan(body, (zeros, zeros), (pmats, proj))
+    (acc_f, acc_b), _ = jax.lax.scan(
+        body, (zeros, zeros), (pmats, proj, _stream_scales(proj, scales)))
     # single relayout: back half is voxel nz-1-k at index k
     return jnp.concatenate([acc_f, jnp.flip(acc_b, axis=-1)], axis=-1)
 

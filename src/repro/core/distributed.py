@@ -37,6 +37,14 @@ from .precision import Precision
 
 Array = jax.Array
 
+# Row-reduce modes that leave the volume sharded over the data axis (vs
+# psum's replicated slab), and the itemsize each mode moves on the wire —
+# THE two definitions shared by the engine (core/plan.py), output_spec
+# below, and the planner's cost/feasibility models. A new reduce mode is
+# added here once, not re-declared per consumer.
+SCATTER_REDUCES = ("scatter", "scatter_bf16")
+REDUCE_WIRE_ITEMSIZE = {"psum": 4, "scatter": 4, "scatter_bf16": 2}
+
 
 @dataclasses.dataclass(frozen=True)
 class IFDKGrid:
@@ -115,11 +123,14 @@ def input_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, _proj_spec(mesh))
 
 
-def output_spec(mesh: Mesh, reduce: Literal["psum", "scatter"]) -> P:
-    if reduce == "scatter":
+def output_spec(mesh: Mesh,
+                reduce: Literal["psum", "scatter", "scatter_bf16"]) -> P:
+    if reduce in SCATTER_REDUCES:
         # x sharded over model (slabs); y scattered over the intra-pod data
         # axis (the pod phase finishes with a psum, leaving y replicated
-        # across pods for the sharded store).
+        # across pods for the sharded store). scatter_bf16 moves the
+        # partial slabs at half width (core/plan.py reduce epilogue) but
+        # lands the same f32 layout.
         return P(AXIS_MODEL, AXIS_DATA)
     return P(AXIS_MODEL)
 
@@ -127,7 +138,8 @@ def output_spec(mesh: Mesh, reduce: Literal["psum", "scatter"]) -> P:
 def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
                          impl: BpImpl = "factorized",
                          window: str = "ramlak",
-                         reduce: Literal["psum", "scatter"] = "scatter",
+                         reduce: Literal["psum", "scatter",
+                                         "scatter_bf16"] = "scatter",
                          precision: Precision | str | None = "fp32",
                          ) -> Callable[[Array], Array]:
     """Build the jit-able distributed reconstruction: projections -> volume.
@@ -136,11 +148,13 @@ def make_distributed_fdk(mesh: Mesh, g: CBCTGeometry,
     Output: (N_x, N_y, N_z); x slab-sharded over `model`, and with
             reduce="scatter" additionally y-sharded over `data` (+`pod`).
 
-    `precision` (core/precision.py) sets the storage dtype of the filtered
-    projections: filtering emits it *before* the column AllGather — the
-    paper's dominant communication term — so bf16/fp16 halves the gathered
-    bytes per rank; back-projection upcasts taps and accumulates f32, and
-    the volume Reduce stays f32.
+    `precision` (core/precision.py) selects the stream codec of the
+    filtered projections: the encode runs *before* the column AllGather —
+    the paper's dominant communication term — so bf16/fp16 halves and
+    fp8_e4m3 quarters the gathered bytes per rank (+ the fp8 codec's
+    4 B/projection scale sidecar); back-projection dequantizes taps and
+    accumulates f32. The volume Reduce stays f32 under "psum"/"scatter";
+    reduce="scatter_bf16" (core/plan.py) halves that side too.
 
     Deprecated-but-stable alias: a thin wrapper over
     ``ReconstructionPlan(..., schedule="fused").build()`` (core/plan.py).

@@ -157,14 +157,22 @@ class PerfBreakdown:
 
 def predict(g: CBCTGeometry, grid: IFDKGrid,
             sys: MachineSpec = ABCI,
-            storage_bytes: float = 4.0) -> PerfBreakdown:
+            storage_bytes: float = 4.0,
+            sidecar_bytes: float = 0.0,
+            reduce_bytes: float = 4.0) -> PerfBreakdown:
     """Eqs. 8-16 (float32 volume; projection-stream width `storage_bytes`).
 
-    `storage_bytes` is the itemsize the projection stream is stored and
-    communicated in (core/precision.py): it scales the load, AllGather and
-    H2D terms — the paper's FP16-texture halving of the dominant
-    communication time. The default 4.0 reproduces the paper's f32 numbers
-    verbatim. The volume side (BP accumulate, Reduce, store) stays f32.
+    `storage_bytes` is the wire itemsize of the projection stream — the
+    stream codec's `wire_bytes_per_sample` (core/precision.py): it scales
+    the load, AllGather and H2D terms — the paper's FP16-texture halving
+    (or the fp8 codec's quartering) of the dominant communication time.
+    `sidecar_bytes` is the codec's total per-projection scale sidecar
+    (fp8: 4 B x N_p) riding on the same wire; it is amortized into the
+    per-sample width so every projection-stream byte term prices it.
+    `reduce_bytes` is the itemsize the volume Reduce moves (4.0 = f32 psum/
+    psum_scatter, 2.0 = the plan layer's bf16 compensated scatter); D2H and
+    the PFS store stay f32 — the accumulator and the stored volume are
+    always f32. The defaults reproduce the paper's numbers verbatim.
 
     I/O terms (T_read = Eq. 8, T_write = Eq. 16) price the slice-per-rank
     shard store (repro/io): all R*C ranks read concurrently, R slab owners
@@ -173,7 +181,10 @@ def predict(g: CBCTGeometry, grid: IFDKGrid,
     the paper's aggregate-bandwidth assumption holds verbatim.
     """
     szf = 4.0
-    sp = float(storage_bytes)
+    # Effective wire bytes per projection sample: quantized data plus the
+    # scale sidecar spread over the N_u*N_v samples of each projection.
+    sp = float(storage_bytes) + float(sidecar_bytes) / (
+        g.n_u * g.n_v * g.n_proj or 1)
     r, c = grid.r, grid.c
     n_ranks = grid.n_ranks
     n_nodes = max(1, n_ranks // sys.devices_per_node)
@@ -190,7 +201,8 @@ def predict(g: CBCTGeometry, grid: IFDKGrid,
     t_bp = t_h2d + updates / (sys.gups_bp * 2**30)                      # Eq.12
     t_d2h = (szf * sys.devices_per_node * g.n_x * g.n_y * g.n_z
              / (r * sys.bw_hd * sys.n_hd_links))                        # Eq.14
-    t_reduce = vol_bytes / (r * sys.th_reduce)                          # Eq.15
+    t_reduce = (float(reduce_bytes) * g.n_x * g.n_y * g.n_z
+                / (r * sys.th_reduce))                                  # Eq.15
     if c == 1:
         t_reduce = 0.0  # paper: no inter-rank reduction when C == 1
     t_store = vol_bytes / sys.agg_write_bw(r)                           # Eq.16

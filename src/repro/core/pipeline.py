@@ -74,14 +74,16 @@ def make_pipelined_fdk(mesh: Mesh, g: CBCTGeometry,
                        n_steps: int = 4,
                        impl: BpImpl = "factorized",
                        window: str = "ramlak",
-                       reduce: Literal["psum", "scatter"] = "scatter",
+                       reduce: Literal["psum", "scatter",
+                                       "scatter_bf16"] = "scatter",
                        precision: Precision | str | None = "fp32",
                        ) -> Callable[[Array], Array]:
     """Pipelined reconstruction; same interface as make_distributed_fdk.
 
-    With a low-precision `precision` policy the per-step AllGather moves
-    half-width bytes *and* overlaps with the previous batch's f32-accumulate
-    back-projection — the two paper speedups compose.
+    With a low-precision stream codec the per-step AllGather moves half-
+    (bf16/fp16) or quarter-width (fp8_e4m3 + scale sidecar) bytes *and*
+    overlaps with the previous batch's f32-accumulate back-projection — the
+    two paper speedups compose.
 
     Deprecated-but-stable alias for
     ``ReconstructionPlan(..., schedule="pipelined").build()``.

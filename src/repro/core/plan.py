@@ -45,7 +45,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
 from .distributed import (
-    IFDKGrid, _proj_spec, output_spec, shift_pmats_i,
+    IFDKGrid, SCATTER_REDUCES, _proj_spec, output_spec, shift_pmats_i,
 )
 from .fdk import BpImpl, _get_backprojector, fdk_scale
 from .filtering import _WINDOWS, make_filter
@@ -55,11 +55,12 @@ from .precision import Precision, resolve_precision
 Array = jax.Array
 
 Schedule = Literal["fused", "pipelined", "chunked"]
-ReduceMode = Literal["psum", "scatter"]
+ReduceMode = Literal["psum", "scatter", "scatter_bf16"]
 
 _SCHEDULES = ("fused", "pipelined", "chunked")
-_REDUCES = ("psum", "scatter")
+_REDUCES = ("psum",) + SCATTER_REDUCES
 _IMPLS = ("reference", "factorized", "kernel")
+_PRECISIONS = ("fp32", "bf16", "fp16", "fp8_e4m3")
 
 # build() results, keyed by the (hashable) plan: repeated builds of the same
 # plan reuse the jitted function, so `reconstruct(...)`-style per-call
@@ -119,7 +120,14 @@ class ReconstructionPlan:
     y_chunks   : y-axis chunks (chunked only).
     reduce     : row-reduce epilogue. "psum" replicates the slab; "scatter"
                  leaves it sharded over `data` for the parallel store
-                 (requires a mesh with a `data` axis).
+                 (requires a mesh with a `data` axis); "scatter_bf16" is
+                 scatter at half the reduce wire bytes — partial slabs are
+                 quantized to bf16 before the psum_scatter and the result
+                 upcast to f32, with an f32 error-feedback carry under the
+                 chunked schedule (each step's quantization residual is
+                 re-injected into the next step's partial, so the error
+                 does not grow with n_steps). See DESIGN.md (codec layer)
+                 for the error model.
     blocks     : explicit (bi, bj, bs) Pallas tile for impl="kernel";
                  None = resolve from the VMEM-budget autotuner at plan time.
     vmem_budget: byte budget handed to the autotuner (None = env default).
@@ -209,11 +217,12 @@ class ReconstructionPlan:
         elif self.y_chunks is not None:
             raise ValueError(
                 "y_chunks only applies to the chunked schedule")
-        if self.reduce == "scatter":
+        if self.reduce in SCATTER_REDUCES:
             if self.mesh is None or AXIS_DATA not in self.mesh.axis_names:
                 raise ValueError(
-                    "reduce='scatter' needs a mesh with a 'data' axis to "
-                    "scatter over; use reduce='psum' on a single device")
+                    f"reduce={self.reduce!r} needs a mesh with a 'data' "
+                    "axis to scatter over; use reduce='psum' on a single "
+                    "device")
             scatter_extent = (g.n_y // self.y_chunks
                               if self.schedule == "chunked" else g.n_y)
             if scatter_extent % self._data_size:
@@ -292,7 +301,7 @@ class ReconstructionPlan:
     def _output_spec(self) -> Optional[P]:
         if self.mesh is None:
             return None
-        if self.schedule == "chunked" and self.reduce == "scatter":
+        if self.schedule == "chunked" and self.reduce in SCATTER_REDUCES:
             # (nx_slab, y_chunks, yc/dp, nz): x over model, chunk interior
             # scattered over data; reshape(nx, ny, nz) outside restores the
             # canonical volume.
@@ -316,16 +325,26 @@ class ReconstructionPlan:
         nb = g.n_proj // grid.n_ranks // n_steps
         scale = fdk_scale(g)
         prec = self.resolved_precision()
-        filt = make_filter(g, self.window, out_dtype=prec.storage_dtype)
+        codec = prec.codec
+        # The filter emits f32; the stream codec owns the quantization to
+        # the wire format (scale-free codecs are a plain cast — fused under
+        # jit, byte-identical to casting inside the filter).
+        filt = make_filter(g, self.window, out_dtype=jnp.float32)
         backproject = self._resolve_backprojector()
 
-        # --- stage: filter + column AllGather (paper Fig. 3b) --------------
+        # --- stage: filter + encode + column AllGather (paper Fig. 3b) -----
+        # The AllGather moves the codec's WIRE format: quantized data plus,
+        # for scaled codecs (fp8), the per-projection f32 scale sidecar.
         def gather_batch(pm_b: Array, raw_b: Array):
-            q = filt(raw_b)
+            data, scales = codec.encode(filt(raw_b))
             if model_axis is None:
-                return pm_b, q
+                return pm_b, data, scales
+            gathered_scales = (
+                None if scales is None
+                else lax.all_gather(scales, model_axis, axis=0, tiled=True))
             return (lax.all_gather(pm_b, model_axis, axis=0, tiled=True),
-                    lax.all_gather(q, model_axis, axis=0, tiled=True))
+                    lax.all_gather(data, model_axis, axis=0, tiled=True),
+                    gathered_scales)
 
         # --- stage: x-slab reparameterization (offset folded into P) -------
         def slab_pmats(pm_col: Array) -> Array:
@@ -335,12 +354,19 @@ class ReconstructionPlan:
             return shift_pmats_i(pm_col, i0.astype(pm_col.dtype))
 
         # --- stage: row-reduce epilogue (fused/pipelined full slab) --------
+        # "scatter_bf16" moves the partial slab at half width: quantize to
+        # bf16, psum_scatter, upcast — ONE rounding per rank (relative error
+        # <= C_data * eps_bf16/2 on the reduced slab); the cross-pod finish
+        # stays f32. Plain "scatter"/"psum" paths are byte-identical to the
+        # f32 collective (the astype(f32) is a no-op on an f32 slab).
         def reduce_slab(slab: Array) -> Array:
             if not dp:
                 return slab
-            if self.reduce == "scatter":
+            if self.reduce in SCATTER_REDUCES:
+                if self.reduce == "scatter_bf16":
+                    slab = slab.astype(jnp.bfloat16)
                 slab = lax.psum_scatter(slab, dp[-1], scatter_dimension=1,
-                                        tiled=True)
+                                        tiled=True).astype(jnp.float32)
                 for a in dp[:-1]:  # multi-pod: finish across pods
                     slab = lax.psum(slab, a)
                 return slab
@@ -350,9 +376,9 @@ class ReconstructionPlan:
 
         if self.schedule == "fused":
             def rank_fn(pm_local: Array, proj_local: Array) -> Array:
-                pm_col, q_col = gather_batch(pm_local, proj_local)
+                pm_col, q_col, sc_col = gather_batch(pm_local, proj_local)
                 slab = backproject(slab_pmats(pm_col), q_col,
-                                   nx_slab, g.n_y, g.n_z)
+                                   nx_slab, g.n_y, g.n_z, scales=sc_col)
                 return reduce_slab(slab) * scale
             return rank_fn
 
@@ -363,17 +389,19 @@ class ReconstructionPlan:
                 buf = gather_batch(pm_steps[0], raw_steps[0])  # prologue
 
                 def step(carry, xs):
-                    acc, (pm_prev, q_prev) = carry
+                    acc, (pm_prev, q_prev, sc_prev) = carry
                     nxt = gather_batch(*xs)        # comm for batch s
                     acc = acc + backproject(        # compute for batch s-1
-                        slab_pmats(pm_prev), q_prev, nx_slab, g.n_y, g.n_z)
+                        slab_pmats(pm_prev), q_prev, nx_slab, g.n_y, g.n_z,
+                        scales=sc_prev)
                     return (acc, nxt), None
 
                 init = (jnp.zeros((nx_slab, g.n_y, g.n_z), jnp.float32), buf)
-                (acc, (pm_last, q_last)), _ = lax.scan(
+                (acc, (pm_last, q_last, sc_last)), _ = lax.scan(
                     step, init, (pm_steps[1:], raw_steps[1:]))
                 acc = acc + backproject(            # epilogue
-                    slab_pmats(pm_last), q_last, nx_slab, g.n_y, g.n_z)
+                    slab_pmats(pm_last), q_last, nx_slab, g.n_y, g.n_z,
+                    scales=sc_last)
                 return reduce_slab(acc) * scale
             return rank_fn
 
@@ -381,7 +409,8 @@ class ReconstructionPlan:
         # reduce, bounding the live slab state (output-side streaming).
         y_chunks = self.y_chunks
         yc = g.n_y // y_chunks
-        scatter = self.reduce == "scatter"
+        scatter = self.reduce in SCATTER_REDUCES
+        compensated = self.reduce == "scatter_bf16"
         yc_local = yc // self._data_size if scatter else yc
 
         def chunk_reduce(part: Array) -> Array:
@@ -397,30 +426,51 @@ class ReconstructionPlan:
             raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
             buf = gather_batch(pm_steps[0], raw_steps[0])
 
-            def bp_chunks(acc, pm_col, q_col):
+            def bp_chunks(state, pm_col, q_col, sc_col):
+                acc, err = state
                 pm_slab = slab_pmats(pm_col)
 
-                def one_chunk(ci, a):
+                def one_chunk(ci, st):
+                    a, e = st
                     pm_c = shift_pmats_j(pm_slab,
                                          (ci * yc).astype(pm_slab.dtype))
-                    part = backproject(pm_c, q_col, nx_slab, yc, g.n_z)
-                    part = chunk_reduce(part)
-                    return lax.dynamic_update_index_in_dim(
-                        a, a[:, ci] + part, ci, axis=1)
+                    part = backproject(pm_c, q_col, nx_slab, yc, g.n_z,
+                                       scales=sc_col)
+                    if compensated:
+                        # error feedback: re-inject the residual this rank
+                        # dropped when it quantized the SAME chunk last
+                        # round, so quantization error does not accumulate
+                        # over the n_steps micro-batches — only the final
+                        # round's rounding survives (one per rank).
+                        part = part + lax.dynamic_index_in_dim(
+                            e, ci, axis=1, keepdims=False)
+                        half = part.astype(jnp.bfloat16)
+                        e = lax.dynamic_update_index_in_dim(
+                            e, part - half.astype(jnp.float32), ci, axis=1)
+                        red = lax.psum_scatter(
+                            half, data_axis, scatter_dimension=1,
+                            tiled=True).astype(jnp.float32)
+                    else:
+                        red = chunk_reduce(part)
+                    a = lax.dynamic_update_index_in_dim(
+                        a, a[:, ci] + red, ci, axis=1)
+                    return a, e
 
-                return lax.fori_loop(0, y_chunks, one_chunk, acc)
+                return lax.fori_loop(0, y_chunks, one_chunk, (acc, err))
 
             def step(carry, xs):
-                acc, prev = carry
+                state, prev = carry
                 nxt = gather_batch(*xs)            # comm for batch s
-                acc = bp_chunks(acc, *prev)        # compute for batch s-1
-                return (acc, nxt), None
+                state = bp_chunks(state, *prev)    # compute for batch s-1
+                return (state, nxt), None
 
-            init = jnp.zeros((nx_slab, y_chunks, yc_local, g.n_z),
+            acc0 = jnp.zeros((nx_slab, y_chunks, yc_local, g.n_z),
                              jnp.float32)
-            (acc, last), _ = lax.scan(step, (init, buf),
-                                      (pm_steps[1:], raw_steps[1:]))
-            acc = bp_chunks(acc, *last)            # epilogue
+            err0 = (jnp.zeros((nx_slab, y_chunks, yc, g.n_z), jnp.float32)
+                    if compensated else None)
+            ((acc, err), last), _ = lax.scan(step, ((acc0, err0), buf),
+                                             (pm_steps[1:], raw_steps[1:]))
+            acc, _ = bp_chunks((acc, err), *last)  # epilogue
             if pod_axis is not None:
                 acc = lax.psum(acc, pod_axis)
             if not scatter:
@@ -519,7 +569,7 @@ _SPEC_VALUE_KEYS = {
     **{v: "schedule" for v in _SCHEDULES},
     **{v: "reduce" for v in _REDUCES},
     **{v: "impl" for v in _IMPLS},
-    **{v: "precision" for v in ("fp32", "bf16", "fp16")},
+    **{v: "precision" for v in _PRECISIONS},
     **{v: "window" for v in _WINDOWS},
 }
 

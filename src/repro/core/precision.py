@@ -1,44 +1,164 @@
-"""Storage-precision policy for the projection stream (paper §3.2).
+"""Stream codecs + storage-precision policy for the projection stream.
 
-iFDK stores filtered projections as FP16 textures: the back-projection hot
-loop reads half-width taps (halving HBM/texture traffic) while the voxel
-accumulator stays in FP32 — and, at scale, the MPI AllGather of filtered
-projections (the dominant communication term, §4.1.3) moves half the bytes.
-This module is the single source of truth for that trade:
+At scale the pipeline is bound by moving bytes, not flops: the AllGather of
+filtered projections (paper §4.1.3) and the row Reduce of partial volumes
+(§4.1.4) dominate. iFDK's answer is FP16 textures — half-width taps, f32
+accumulate. This module generalizes that into a **stream-codec layer**: one
+abstraction owning how the filtered-projection stream is represented on the
+wire (and on disk), so every consumer — the plan engine's collectives, the
+planner's cost/feasibility models, the shard store, the kernels — prices and
+moves the same bytes.
 
-  * ``storage``  — the dtype filtered projections are *stored and
-                   communicated* in (``fp32`` | ``bf16`` | ``fp16``).
-  * accumulation — always float32, in every back-projection implementation
-                   (reference, factorized, Pallas kernel, MXU): taps are
-                   upcast after the gather, before the w = 1/z^2 FMA.
+  StreamCodec        encode (f32 -> wire) / decode (wire -> f32), the wire
+                     dtype, wire bytes per sample, and an optional
+                     per-projection f32 **scale sidecar**.
+  f32 / bf16         plain casts (byte-identical to the historical policy).
+  fp16               scale-on-overflow: ramp-filtered projections of
+                     high-contrast scans can exceed fp16's 65504 — a naive
+                     cast emits inf and poisons the volume. Encode applies
+                     a per-projection scale s = max(1, max|q| / 65504):
+                     in-range projections get s = 1.0 exactly (data bits
+                     identical to the naive cast), overflowing ones are
+                     brought into range and recovered by the decode scale
+                     instead of clipped (a pure saturate would bias every
+                     clipped tap; scaling keeps fp16 relative accuracy at
+                     any contrast).
+  fp8_e4m3           e4m3 storage with one f32 scale per projection:
+                     encode *normalizes* each projection by s = max|q|/448
+                     (e4m3's epsilon is relative — using the full range
+                     maximizes SNR) and casts; the (N_p,) f32 scale sidecar
+                     rides next to the data through the AllGather and the
+                     shard store. Quarter the AllGather bytes of f32
+                     (+ 4 B/projection sidecar).
 
-The policy rides through ``fdk.reconstruct``, ``make_distributed_fdk``,
-``make_pipelined_fdk`` and ``make_chunked_fdk`` as a ``precision=`` argument
-(a ``Precision``, a storage-dtype name, or None for the backend default).
+Decoding happens *inside* the back-projection implementations: taps are
+gathered in the wire dtype, upcast to f32, and the per-projection scale is
+folded into the accumulation weight (``w * scale`` — bilinear interpolation
+is linear, so scaling after the gather equals decoding up front). The voxel
+accumulator is always f32.
 
-Default selection: ``bf16`` on CPU/TPU (same exponent range as f32 — no
-overflow concern for ramp-filtered projections, which can exceed fp16's
-65504 for high-contrast scans), ``fp16`` on GPU (texture-unit heritage,
-matches the paper's choice).
+``Precision`` remains the user-facing policy object (a storage name riding
+through every plan/entry point); it now resolves to a codec via ``.codec``.
+Default selection: ``bf16`` on CPU/TPU (f32 exponent range), ``fp16`` on GPU
+(texture-unit heritage, matching the paper).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+Array = jax.Array
+
 _STORAGE_DTYPES = {
     "fp32": jnp.float32,
     "bf16": jnp.bfloat16,
     "fp16": jnp.float16,
+    "fp8_e4m3": jnp.float8_e4m3fn,
 }
 _CANONICAL = {
     "float32": "fp32", "f32": "fp32",
     "bfloat16": "bf16",
     "float16": "fp16", "half": "fp16",
+    "fp8": "fp8_e4m3", "e4m3": "fp8_e4m3",
+    "float8_e4m3": "fp8_e4m3", "float8_e4m3fn": "fp8_e4m3",
 }
+
+# One f32 scale per projection (the sidecar "manifest row" of a scaled
+# codec): 4 bytes per projection on the wire and in the shard store.
+SCALE_BYTES = 4
+
+
+class EncodedStream(NamedTuple):
+    """A filtered-projection batch in wire format: the quantized data and,
+    for scaled codecs, one f32 scale per projection (else None). The pair is
+    what the column AllGather moves and what the shard store persists."""
+
+    data: Array
+    scales: Optional[Array]
+
+    @property
+    def nbytes(self) -> int:
+        n = self.data.size * jnp.dtype(self.data.dtype).itemsize
+        if self.scales is not None:
+            n += self.scales.size * SCALE_BYTES
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCodec:
+    """How the filtered-projection stream is represented on the wire.
+
+    ``encode`` consumes the filter stage's f32 output; ``decode`` restores
+    f32 (the oracle inverse — the engine instead folds ``scales`` into the
+    back-projection weight, which is equivalent by linearity).
+    """
+
+    name: str
+    wire_dtype: jnp.dtype
+    has_scales: bool = False
+    # Scaled codecs only: True normalizes every projection to the full wire
+    # range (fp8 — relative epsilon, use all of it); False scales only when
+    # the projection would overflow, so in-range data stays bit-identical
+    # to a plain cast (fp16).
+    normalize: bool = False
+
+    @property
+    def wire_bytes_per_sample(self) -> int:
+        return jnp.dtype(self.wire_dtype).itemsize
+
+    def sidecar_bytes(self, n_proj: int) -> int:
+        """Bytes of the per-projection scale sidecar for `n_proj` frames."""
+        return SCALE_BYTES * n_proj if self.has_scales else 0
+
+    def wire_bytes(self, n_proj: int, n_v: int, n_u: int) -> int:
+        """Total wire bytes of an encoded (n_proj, n_v, n_u) stream:
+        quantized data + scale sidecar. The one formula the engine, the
+        planner's cost model and the benchmarks all share."""
+        return (n_proj * n_v * n_u * self.wire_bytes_per_sample
+                + self.sidecar_bytes(n_proj))
+
+    def encode(self, q: Array) -> EncodedStream:
+        """f32 filtered projections (..., N_v, N_u) -> wire format."""
+        if self.has_scales:
+            fmax = float(jnp.finfo(self.wire_dtype).max)
+            amax = jnp.max(jnp.abs(q).astype(jnp.float32), axis=(-2, -1))
+            if self.normalize:
+                scales = jnp.where(amax > 0, amax / fmax, 1.0)
+            else:
+                scales = jnp.maximum(amax / fmax, 1.0)
+            data = (q.astype(jnp.float32)
+                    / scales[..., None, None]).astype(self.wire_dtype)
+            return EncodedStream(data, scales)
+        return EncodedStream(q.astype(self.wire_dtype), None)
+
+    def decode(self, data: Array, scales: Optional[Array] = None) -> Array:
+        """Wire format -> f32 taps (the reference inverse of ``encode``)."""
+        out = data.astype(jnp.float32)
+        if self.has_scales:
+            if scales is None:
+                raise ValueError(
+                    f"codec {self.name!r} needs its per-projection scale "
+                    "sidecar to decode")
+            out = out * scales[..., None, None].astype(jnp.float32)
+        return out
+
+
+CODECS = {
+    "fp32": StreamCodec("fp32", jnp.dtype(jnp.float32)),
+    "bf16": StreamCodec("bf16", jnp.dtype(jnp.bfloat16)),
+    "fp16": StreamCodec("fp16", jnp.dtype(jnp.float16), has_scales=True),
+    "fp8_e4m3": StreamCodec("fp8_e4m3", jnp.dtype(jnp.float8_e4m3fn),
+                            has_scales=True, normalize=True),
+}
+
+
+def codec_for(name: str) -> StreamCodec:
+    """Resolve a storage name (or alias) to its StreamCodec."""
+    return Precision(name).codec
 
 
 def default_storage(backend: str | None = None) -> str:
@@ -49,7 +169,7 @@ def default_storage(backend: str | None = None) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class Precision:
-    """Projection-stream precision policy: storage dtype + f32 accumulate."""
+    """Projection-stream precision policy: storage codec + f32 accumulate."""
 
     storage: str = "fp32"
 
@@ -63,6 +183,10 @@ class Precision:
         object.__setattr__(self, "storage", name)
 
     @property
+    def codec(self) -> StreamCodec:
+        return CODECS[self.storage]
+
+    @property
     def storage_dtype(self) -> jnp.dtype:
         return jnp.dtype(_STORAGE_DTYPES[self.storage])
 
@@ -72,6 +196,8 @@ class Precision:
 
     @property
     def storage_bytes(self) -> int:
+        """Wire bytes per sample (the codec's quantized itemsize; the scale
+        sidecar is priced separately — see ``wire_bytes``)."""
         return self.storage_dtype.itemsize
 
     def eps(self) -> float:
@@ -85,16 +211,36 @@ class Precision:
         most eps/2 relative; the weighted sum over N_p projections averages
         the independent rounding errors, so a small multiple of eps bounds
         the volume RMSE with margin. fp32 keeps the paper's 1e-5 bound.
+
+        Normalizing codecs (fp8) get a TIGHTER bound than the generic
+        2*eps: per-projection scaling pins every tap at eps/2 of its
+        projection's max, and the projection average shrinks the volume
+        RMSE further — eps/4 still leaves ~7x margin over the measured
+        error while keeping the acceptance gates sensitive to a
+        misapplied/misaligned scale sidecar (which degrades output 10x+).
         """
+        if self.codec.normalize:
+            return max(1e-5, self.eps() / 4)
         return max(1e-5, 2.0 * self.eps())
 
     def max_tol(self) -> float:
-        """Relative max-abs-error bound vs an fp32 oracle (no averaging)."""
+        """Relative max-abs-error bound vs an fp32 oracle (no averaging);
+        eps (not 8*eps) for normalizing codecs, same rationale as
+        ``rmse_tol``."""
+        if self.codec.normalize:
+            return max(1e-4, self.eps())
         return max(1e-4, 8.0 * self.eps())
 
+    def sidecar_bytes(self, n_proj: int) -> int:
+        return self.codec.sidecar_bytes(n_proj)
+
+    def wire_bytes(self, n_proj: int, n_v: int, n_u: int) -> int:
+        return self.codec.wire_bytes(n_proj, n_v, n_u)
+
     def allgather_bytes(self, n_proj: int, n_v: int, n_u: int) -> int:
-        """Per-rank AllGather payload for the filtered-projection stream."""
-        return n_proj * n_v * n_u * self.storage_bytes
+        """Per-rank AllGather payload for the filtered-projection stream
+        (quantized data + scale sidecar)."""
+        return self.wire_bytes(n_proj, n_v, n_u)
 
 
 def resolve_precision(precision: "Precision | str | None") -> Precision:

@@ -217,6 +217,7 @@ def _global_shard_table(arr: jax.Array) -> list[Index]:
 
 
 def save_array(path: str, arr, *, chunks: Optional[Sequence[int]] = None,
+               extra_manifest: Optional[dict] = None,
                _process_index: Optional[int] = None) -> str:
     """Write `arr` as a shard store at `path` (clearing any stale store).
 
@@ -224,6 +225,11 @@ def save_array(path: str, arr, *, chunks: Optional[Sequence[int]] = None,
                      only the shards it owns (replica 0 copies).
     HostShardedArray the snapshot path (async checkpoint writer).
     host array       one file, or a `chunks=(c0, c1, ...)` regular grid.
+
+    `extra_manifest` merges additional keys into MANIFEST.json (reserved
+    keys shape/dtype/spec/shards win) — e.g. the stream layer records the
+    codec an encoded projection store was quantized with, so readers know
+    to load the scale sidecar next to the data (repro/io/streams.py).
     """
     pidx = jax.process_index() if _process_index is None else _process_index
     if pidx == 0 and os.path.exists(path):
@@ -267,12 +273,13 @@ def save_array(path: str, arr, *, chunks: Optional[Sequence[int]] = None,
             with open(os.path.join(shard_dir, fname), "wb") as f:
                 f.write(piece.tobytes())
     if pidx == 0:
-        manifest = {
+        manifest = dict(extra_manifest or {})
+        manifest.update({
             "shape": list(shape),
             "dtype": str(dtype),
             "spec": spec,
             "shards": entries,
-        }
+        })
         with open(os.path.join(path, MANIFEST), "w") as f:
             json.dump(manifest, f, indent=1)
     return path

@@ -5,15 +5,21 @@ its N_p/(R*C) slice from the parallel filesystem, and it does not return its
 slab — it *stores* it. These two endpoints wrap the shard store
 (shard_store.py) in pipeline terms:
 
-  ProjectionSource  a raw-projection shard store feeding the plan engine's
+  ProjectionSource  a projection shard store feeding the plan engine's
                     filter stage: `load(mesh)` scatter-reads exactly the
                     shards that overlap each rank's `input_sharding(mesh)`
                     slice (Eq. 5 load split) and returns the sharded device
-                    array the engine consumes.
+                    array the engine consumes. With `codec=` at write time
+                    the store persists the stream codec's WIRE format —
+                    quantized shards plus, for scaled codecs (fp8), a
+                    per-projection f32 scale sidecar store at
+                    `<path>/scales` — and `load` decodes back to f32;
+                    `load_encoded` returns the wire-format pair verbatim
+                    (bit-exact round-trip, see tests/test_shard_store.py).
   VolumeSink        the paper's PFS store: `write(volume)` streams each
                     rank's slab (each addressable shard of the engine's
-                    output — x over `model`, plus y over `data` with
-                    reduce="scatter") to its own file.
+                    output — x over `model`, plus y over `data` with a
+                    scatter reduce) to its own file.
 
 Both are wired as optional `source=` / `sink=` stages on
 `ReconstructionPlan.build()` (core/plan.py), closing the pipeline:
@@ -28,24 +34,52 @@ import os
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.precision import Precision, resolve_precision
 
 from . import shard_store
 
+# Sub-store holding the per-projection f32 scale sidecar of an encoded
+# projection store (sibling of the data store's `shards/` directory).
+SCALES_DIR = "scales"
+
 
 class ProjectionSource:
-    """Raw projections stored shard-per-file, restorable onto any mesh."""
+    """Projections stored shard-per-file (raw f32, or a stream codec's wire
+    format + scale sidecar), restorable onto any mesh."""
 
     def __init__(self, path: str):
         self.path = path
 
     @classmethod
     def write(cls, path: str, projections,
-              chunks: Optional[Sequence[int]] = None) -> "ProjectionSource":
+              chunks: Optional[Sequence[int]] = None,
+              codec: "Precision | str | None" = None) -> "ProjectionSource":
         """Lay projections down as a shard store. For a device array the
         files follow its sharding; for a host array pass e.g.
-        ``chunks=(n_ranks, 1, 1)`` for the paper's slice-per-rank layout."""
-        shard_store.save_array(path, projections, chunks=chunks)
+        ``chunks=(n_ranks, 1, 1)`` for the paper's slice-per-rank layout.
+
+        `codec` (a storage-precision name, e.g. "fp8_e4m3") persists the
+        stream codec's wire format instead of the input dtype: the data
+        store holds the quantized shards (its manifest records the codec),
+        and scaled codecs add a `<path>/scales` sidecar store with one f32
+        scale per projection — fp8 shrinks the on-disk stream to a quarter
+        of f32, the same trade the AllGather makes.
+        """
+        if codec is None:
+            shard_store.save_array(path, projections, chunks=chunks)
+            return cls(path)
+        prec = resolve_precision(codec)
+        data, scales = prec.codec.encode(jnp.asarray(projections))
+        shard_store.save_array(path, data, chunks=chunks,
+                               extra_manifest={"codec": prec.storage})
+        if scales is not None:
+            shard_store.save_array(os.path.join(path, SCALES_DIR),
+                                   np.asarray(scales),
+                                   chunks=None if chunks is None
+                                   else chunks[:1])
         return cls(path)
 
     @property
@@ -57,14 +91,51 @@ class ProjectionSource:
         return shard_store.dtype_from_name(
             shard_store.read_manifest(self.path)["dtype"])
 
+    @property
+    def codec_name(self) -> Optional[str]:
+        """Storage codec the store was encoded with (None = raw store)."""
+        return shard_store.read_manifest(self.path).get("codec")
+
+    def load_encoded(self):
+        """The stored wire-format pair (data, scales) as host arrays —
+        verbatim bytes, no decode. scales is None for raw/scale-free
+        stores. The bit-exact-round-trip accessor."""
+        data = shard_store.load_array(self.path)
+        spath = os.path.join(self.path, SCALES_DIR)
+        scales = (shard_store.load_array(spath)
+                  if os.path.exists(os.path.join(spath,
+                                                 shard_store.MANIFEST))
+                  else None)
+        return data, scales
+
     def load(self, mesh=None) -> jax.Array:
         """Scatter-read the projections for `mesh` (each rank's slice of the
-        leading projection axis); the whole array on one device if None."""
+        leading projection axis); the whole array on one device if None.
+        Encoded stores are decoded back to f32 (quantized data x scale
+        sidecar) after the scatter read — each rank only ever reads and
+        dequantizes its own slice of the wire bytes."""
+        codec_name = self.codec_name
         if mesh is None:
-            return jax.device_put(shard_store.load_array(self.path))
+            if codec_name is None:
+                return jax.device_put(shard_store.load_array(self.path))
+            data, scales = self.load_encoded()
+            return jax.device_put(
+                np.asarray(Precision(codec_name).codec.decode(
+                    jnp.asarray(data),
+                    None if scales is None else jnp.asarray(scales))))
         from repro.core.distributed import input_sharding
 
-        return shard_store.load_array(self.path, input_sharding(mesh))
+        sharding = input_sharding(mesh)
+        data = shard_store.load_array(self.path, sharding)
+        if codec_name is None:
+            return data
+        codec = Precision(codec_name).codec
+        scales = None
+        spath = os.path.join(self.path, SCALES_DIR)
+        if os.path.exists(os.path.join(spath, shard_store.MANIFEST)):
+            scales = shard_store.load_array(spath)
+        return jax.jit(codec.decode)(
+            data, None if scales is None else jnp.asarray(scales))
 
 
 class VolumeSink:

@@ -19,12 +19,16 @@ Design (see DESIGN.md §2 for the CUDA->TPU mapping):
 
 VMEM working set per grid step:
     out tile   Bi*Bj*2*nzh*4 B
-  + qt batch   Bs*Nu*Nv*{2,4} B
-  + pmats      Bs*12*4 B
+  + qt batch   Bs*Nu*Nv*{1,2,4} B
+  + pmats      Bs*13*4 B   (12 matrix entries + the codec's per-projection
+                            decode scale)
 `vmem_bytes()` is the budgeting model the autotuner (tune.py) prunes block
-candidates with. The projection batch may arrive in bf16/fp16 (the precision
-policy's storage stream — halving the qt term); taps are upcast to f32 at
-the gather, and the accumulator tile is always f32.
+candidates with. The projection batch may arrive in bf16/fp16/fp8 (the
+stream codec's wire dtype — halving or quartering the qt term); taps are
+upcast to f32 at the gather, the codec's per-projection scale (parameter
+row column 12, 1.0 for scale-free codecs) multiplies the accumulation
+weight — dequantization before the f32 FMA — and the accumulator tile is
+always f32.
 
 This container is CPU-only: the kernel is exercised with interpret=True
 (Python semantics of the same body). On real TPU hardware the flat `take`
@@ -76,7 +80,7 @@ def _bp_kernel(pm_ref, qt_ref, out_ref, *, bs: int, nzh: int, n_v: int):
     j = (gj * bj + lax.broadcasted_iota(jnp.float32, (bi, bj), 1))
     k = lax.broadcasted_iota(jnp.float32, (1, 1, nzh), 2)
 
-    pm = pm_ref[...]  # (bs, 12) f32
+    pm = pm_ref[...]  # (bs, 13) f32: 12 matrix entries + codec decode scale
 
     def step(s, acc):
         acc_f, acc_b = acc
@@ -88,7 +92,7 @@ def _bp_kernel(pm_ref, qt_ref, out_ref, *, bs: int, nzh: int, n_v: int):
         z = p[8] * i + p[9] * j + p[11]
         f = 1.0 / z
         u = x0 * f                      # constant along k (T2)
-        w = f * f                       # constant along k (T3)
+        w = f * f * p[12]               # T3 weight x codec scale (decode)
         # v is affine in k: one FMA per voxel
         v = (y0[..., None] + p[6] * k) * f[..., None]        # (bi, bj, nzh)
         ub = jnp.broadcast_to(u[..., None], v.shape)
@@ -113,7 +117,7 @@ def _bp_kernel(pm_ref, qt_ref, out_ref, *, bs: int, nzh: int, n_v: int):
 def vmem_bytes(bi: int, bj: int, bs: int, nu: int, nv: int, nzh: int,
                qt_dtype=jnp.float32) -> int:
     qbytes = jnp.dtype(qt_dtype).itemsize
-    return bi * bj * 2 * nzh * 4 + bs * nu * nv * qbytes + bs * 12 * 4
+    return bi * bj * 2 * nzh * 4 + bs * nu * nv * qbytes + bs * 13 * 4
 
 
 @functools.partial(
@@ -123,12 +127,18 @@ def backproject_dual_pallas(pmats: Array, qt: Array,
                             nx: int, ny: int, nz: int,
                             bi: int = 8, bj: int = 8, bs: int = 8,
                             interpret: bool = True) -> Array:
-    """pmats (Np, 12) f32, qt (Np, Nu, Nv) -> dual-slab volume (nx, ny, 2, nz/2).
+    """pmats (Np, 13) f32 — 12 projection-matrix entries + the stream
+    codec's per-projection decode scale (pass 1.0 for unscaled streams; a
+    legacy (Np, 12) matrix is widened with unit scales) — and qt (Np, Nu,
+    Nv) -> dual-slab volume (nx, ny, 2, nz/2).
 
     Np must be a multiple of bs, nx of bi, ny of bj (ops.py pads).
     """
     n_p, nu, nv = qt.shape
     assert nz % 2 == 0 and n_p % bs == 0 and nx % bi == 0 and ny % bj == 0
+    if pmats.shape[1] == 12:
+        pmats = jnp.concatenate(
+            [pmats, jnp.ones((n_p, 1), pmats.dtype)], axis=1)
     nzh = nz // 2
     grid = (nx // bi, ny // bj, n_p // bs)
     kernel = functools.partial(_bp_kernel, bs=bs, nzh=nzh, n_v=nv)
@@ -136,7 +146,7 @@ def backproject_dual_pallas(pmats: Array, qt: Array,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bs, 12), lambda gi, gj, gs: (gs, 0)),
+            pl.BlockSpec((bs, 13), lambda gi, gj, gs: (gs, 0)),
             pl.BlockSpec((bs, nu, nv), lambda gi, gj, gs: (gs, 0, 0)),
         ],
         out_specs=pl.BlockSpec(

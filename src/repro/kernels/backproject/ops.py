@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.backprojection import from_dual_slab
+from repro.core.backprojection import _stream_scales, from_dual_slab
 from .kernel import backproject_dual_pallas
 from . import tune
 
@@ -30,12 +30,15 @@ def backproject_pallas(pmats: Array, proj: Array,
                        bi: int | None = None, bj: int | None = None,
                        bs: int | None = None,
                        interpret: bool | None = None,
-                       vmem_budget: int | None = None) -> Array:
+                       vmem_budget: int | None = None,
+                       scales: Array | None = None) -> Array:
     """Alg. 4 via the Pallas kernel. Same signature/result as the oracles.
 
     pmats: (Np, 3, 4); proj: (Np, N_v, N_u) filtered projections (row = v),
-    in any storage dtype (fp32/bf16/fp16 — the precision policy's stream);
-    taps are upcast inside the kernel and accumulation is always f32.
+    in any wire dtype (fp32/bf16/fp16/fp8 — the stream codec's output);
+    taps are upcast inside the kernel, `scales` (the codec's per-projection
+    sidecar, None = unscaled) rides as column 12 of the parameter row and
+    dequantizes at the accumulation weight, and accumulation is always f32.
     Returns (nx, ny, nz) float32.
 
     Block shapes not given explicitly come from the VMEM-budget autotuner
@@ -55,6 +58,9 @@ def backproject_pallas(pmats: Array, proj: Array,
             fix_bi=bi, fix_bj=bj, fix_bs=bs,
         )
     pm = pmats.reshape(n_p, 12).astype(jnp.float32)
+    sc = (jnp.ones((n_p, 1), jnp.float32) if scales is None
+          else scales.reshape(n_p, 1).astype(jnp.float32))
+    pm = jnp.concatenate([pm, sc], axis=1)
     if n_p % bs:
         pad = bs - n_p % bs
         qt = jnp.pad(qt, ((0, pad), (0, 0), (0, 0)))
@@ -67,7 +73,8 @@ def backproject_pallas(pmats: Array, proj: Array,
 
 @functools.partial(jax.jit, static_argnames=("nx", "ny", "nz"))
 def backproject_mxu(pmats: Array, proj: Array,
-                    nx: int, ny: int, nz: int) -> Array:
+                    nx: int, ny: int, nz: int,
+                    scales: Array | None = None) -> Array:
     """Gather-free back-projection: interpolation as relu-hat matmuls.
 
     For a voxel column (i,j):  val(k) = sum_{a,b} A[ij,a] * B[ij,k,b] * Q^T[a,b]
@@ -95,13 +102,13 @@ def backproject_mxu(pmats: Array, proj: Array,
         return jnp.maximum(0.0, 1.0 - jnp.abs(t))
 
     def body(acc, sp):
-        p, q = sp
+        p, q, s = sp
         x0 = p[0, 0] * i + p[0, 1] * j + p[0, 3]
         y0 = p[1, 0] * i + p[1, 1] * j + p[1, 3]
         z = p[2, 0] * i + p[2, 1] * j + p[2, 3]
         f = 1.0 / z
         u = x0 * f
-        w = f * f
+        w = f * f * s                   # codec decode folded into the weight
         v = (y0[..., None] + p[1, 2] * k) * f[..., None]      # (nx, ny, nzh)
         a = hat(ua[None, None, :] - u[..., None])             # (nx, ny, Nu)
         rows = jnp.einsum("xyu,uv->xyv", a, q)                # MXU matmul
@@ -112,5 +119,6 @@ def backproject_mxu(pmats: Array, proj: Array,
         return acc + jnp.stack([front, back], axis=-2), None
 
     init = jnp.zeros((nx, ny, 2, nzh), jnp.float32)
-    dual, _ = jax.lax.scan(body, init, (pmats.astype(jnp.float32), qt))
+    dual, _ = jax.lax.scan(body, init, (pmats.astype(jnp.float32), qt,
+                                        _stream_scales(proj, scales)))
     return from_dual_slab(dual)

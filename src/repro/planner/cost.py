@@ -5,8 +5,12 @@ pipelined overlap of Eq. 17 baked in. A `ReconstructionPlan` moves every one
 of those assumptions into a knob, so the planner's cost function re-derives
 the terms per plan point:
 
-  storage dtype   load/AllGather/H2D bytes scale with the precision policy's
-                  storage itemsize (perf_model's `storage_bytes`).
+  stream codec    load/AllGather/H2D bytes scale with the codec's wire
+                  itemsize (perf_model's `storage_bytes`) plus the
+                  per-projection scale sidecar of scaled codecs (fp8:
+                  `sidecar_bytes`) — the SAME `Precision.wire_bytes`
+                  formula the engine encodes with, so model and engine
+                  agree on every wire byte.
   schedule        fused      — no overlap: T_compute is the SUM of the stage
                                times (one gather, one back-projection, no
                                Fig. 4 pipeline to hide anything behind);
@@ -19,14 +23,16 @@ the terms per plan point:
                                chunk), an HBM-traffic term on T_bp.
   reduce          psum (allreduce) moves ~2x the bytes of psum_scatter per
                   rank (2(C-1)/C vs (C-1)/C ring traffic) — the volume
-                  Reduce term sees the mode. It also sets the PFS *writer*
+                  Reduce term sees the mode — and scatter_bf16 halves the
+                  scatter bytes again (bf16 slabs on the wire, perf_model's
+                  `reduce_bytes`). The mode also sets the PFS *writer*
                   count for T_write (Eq. 16, the shard store's
-                  slice-per-rank files): scatter leaves the volume sharded
-                  over R x data ranks that all stream their own file, psum
-                  leaves one slab owner per row — R writers. Visible only
-                  when `MachineSpec.bw_rank_io` caps per-rank PFS links;
-                  with the paper's aggregate-bandwidth assumption both
-                  modes saturate the filesystem equally.
+                  slice-per-rank files): the scatter modes leave the volume
+                  sharded over R x data ranks that all stream their own
+                  file, psum leaves one slab owner per row — R writers.
+                  Visible only when `MachineSpec.bw_rank_io` caps per-rank
+                  PFS links; with the paper's aggregate-bandwidth
+                  assumption both modes saturate the filesystem equally.
   impl            relative back-projection throughput factors: the reference
                   projects full (u, v, w) coordinates per voxel (~8x the
                   factorized work, Alg. 2 vs Alg. 4); the Pallas kernel's
@@ -40,7 +46,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.distributed import IFDKGrid
+from repro.core.distributed import (
+    IFDKGrid, REDUCE_WIRE_ITEMSIZE, SCATTER_REDUCES,
+)
 from repro.core.geometry import CBCTGeometry
 from repro.core.perf_model import (
     ABCI, MachineSpec, PerfBreakdown, predict,
@@ -109,14 +117,60 @@ def point_from_plan(plan) -> PlanPoint:
 
 
 def io_writers(point: PlanPoint) -> int:
-    """Concurrent PFS writers of the volume under this plan: with
-    reduce="scatter" every rank of the R x data grid holds (and streams) its
-    own disjoint piece; with psum the slab is replicated across the column,
-    so one owner per row — R writers."""
+    """Concurrent PFS writers of the volume under this plan: with a scatter
+    reduce every rank of the R x data grid holds (and streams) its own
+    disjoint piece; with psum the slab is replicated across the column, so
+    one owner per row — R writers."""
     grid = point.grid
-    if point.reduce == "scatter":
+    if point.reduce in SCATTER_REDUCES:
         return grid.r * (point.data_size or grid.c)
     return grid.r
+
+
+def allgather_wire_bytes(g: CBCTGeometry, point: PlanPoint) -> int:
+    """Total bytes the column AllGather RECEIVES across all ranks under
+    this plan: each of the R*C ranks ends up holding its column's N_p/C
+    projections, (R-1)/R of which arrive over the wire, in the stream
+    codec's format (quantized data + scale sidecar). Zero on a 1-rank
+    column (nothing to gather). The engine-side counterpart is
+    `EncodedStream.nbytes` of the gathered batches — one formula
+    (`Precision.wire_bytes`) serves both."""
+    grid = point.grid
+    if grid.r == 1:
+        return 0
+    prec = resolve_precision(point.precision)
+    per_rank = prec.wire_bytes(g.n_proj // grid.c, g.n_v, g.n_u)
+    return grid.n_ranks * per_rank * (grid.r - 1) // grid.r
+
+
+def reduce_wire_bytes(g: CBCTGeometry, point: PlanPoint) -> int:
+    """Total bytes the row Reduce moves across all ranks under this plan.
+
+    The accounting mirrors the engine's reduce_slab epilogue, which runs
+    PER AXIS: psum is a full-slab f32 allreduce over the data axis and
+    then over the pods (2(D-1)/D + 2(P-1)/P slab bytes per rank); the
+    scatter modes psum_scatter over the DATA axis only — (D-1)/D slab
+    bytes per rank at the mode's wire width (bf16 for scatter_bf16) —
+    followed, on multi-pod grids, by an f32 psum of the already
+    1/D-scattered slab across the C/D pods. `data_size=None` (unknown
+    mesh) assumes the whole column is the data axis, the same convention
+    as `io_writers`."""
+    grid = point.grid
+    if grid.c == 1:
+        return 0
+    slab4 = (g.n_x // grid.r) * g.n_y * g.n_z * 4
+    d = point.data_size or grid.c
+    pods = grid.c // d
+    if point.reduce == "psum":
+        per_rank = 2 * slab4 * (d - 1) // d
+        if pods > 1:
+            per_rank += 2 * slab4 * (pods - 1) // pods
+        return grid.n_ranks * per_rank
+    wire = slab4 * REDUCE_WIRE_ITEMSIZE[point.reduce] // 4
+    per_rank = wire * (d - 1) // d
+    if pods > 1:     # f32 cross-pod finish on the scattered slab
+        per_rank += 2 * (slab4 // d) * (pods - 1) // pods
+    return grid.n_ranks * per_rank
 
 
 def predict_point(g: CBCTGeometry, point: PlanPoint,
@@ -125,7 +179,10 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
     prec = resolve_precision(point.precision)
     sb = float(prec.storage_bytes)
     grid = point.grid
-    base = predict(g, grid, system, storage_bytes=sb)
+    base = predict(
+        g, grid, system, storage_bytes=sb,
+        sidecar_bytes=float(prec.sidecar_bytes(g.n_proj)),
+        reduce_bytes=float(REDUCE_WIRE_ITEMSIZE[point.reduce]))
 
     # impl-aware back-projection: rescale the update-rate part of Eq. 12
     # (t_bp = t_h2d + updates/gups); the H2D part is traffic, not compute.

@@ -9,7 +9,10 @@ the kernel-level VMEM fit (tune.vmem_bytes) for impl="kernel".
 Footprint terms (per device, peak):
 
   proj_shard  raw f32 input shard, N_p/(R*C) projections (Eq. 5 load split).
-  gathered    the post-AllGather filtered column batch in storage dtype:
+  gathered    the post-AllGather filtered column batch in the stream
+              codec's WIRE format — quantized data plus the per-projection
+              scale sidecar of scaled codecs (fp8), the same
+              `Precision.wire_bytes` the engine gathers:
               N_p/(C*n_steps) projections — double-buffered under the
               pipelined/chunked schedules (batch s gathers while s-1
               back-projects, Fig. 4).
@@ -18,8 +21,10 @@ Footprint terms (per device, peak):
                 pipelined  2x — the scan carry accumulator plus the current
                            batch's BP output before the add;
                 chunked    the accumulator (scattered over the data axis
-                           when reduce="scatter" — the whole point of the
-                           schedule) plus 2 chunk-sized partials.
+                           under the scatter reduces — the whole point of
+                           the schedule) plus 2 chunk-sized partials; the
+                           compensated reduce (scatter_bf16) additionally
+                           carries a full-slab f32 error-feedback buffer.
   temps       filter workspace: the per-step local batch at f32 plus its
               FFT pad (~2x).
 
@@ -31,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.distributed import SCATTER_REDUCES
 from repro.core.geometry import CBCTGeometry
 from repro.core.precision import resolve_precision
 
@@ -57,15 +63,17 @@ class MemoryFootprint:
 def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
     grid = point.grid
     prec = resolve_precision(point.precision)
-    sb = prec.storage_bytes
     pix = g.n_u * g.n_v
+    scatter = point.reduce in SCATTER_REDUCES
 
     np_local = g.n_proj // grid.n_ranks          # loaded per rank (Eq. 5)
     proj_shard = np_local * pix * 4
 
     np_step_col = g.n_proj // (grid.c * point.n_steps)   # gathered per step
     buffers = 1 if point.schedule == "fused" else 2
-    gathered = buffers * np_step_col * pix * sb
+    # Wire format: quantized data + scale sidecar (the same bytes the
+    # engine's gather_batch holds after the AllGather).
+    gathered = buffers * prec.wire_bytes(np_step_col, g.n_v, g.n_u)
 
     nx_slab = g.n_x // grid.r
     slab_f32 = nx_slab * g.n_y * g.n_z * 4
@@ -78,10 +86,14 @@ def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
         # The engine's accumulator is scattered over the DATA axis only
         # (the pod axis finishes with a replicated psum) — grid.c is the
         # right divisor only when the whole column group is the data axis.
-        scatter_div = ((point.data_size or grid.c)
-                       if point.reduce == "scatter" else 1)
+        scatter_div = (point.data_size or grid.c) if scatter else 1
         chunk = nx_slab * (g.n_y // y_chunks) * g.n_z * 4
         slab = slab_f32 // scatter_div + 2 * chunk
+    if point.reduce == "scatter_bf16":
+        # The half-width reduce is not free in memory: chunked carries the
+        # full-slab f32 error-feedback buffer; fused/pipelined materialize
+        # a bf16 copy of the slab for the wire.
+        slab += slab_f32 if point.schedule == "chunked" else slab_f32 // 2
 
     temps = 2 * (np_local // max(1, point.n_steps)) * pix * 4
     return MemoryFootprint(proj_shard, gathered, slab, temps)

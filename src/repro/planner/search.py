@@ -5,8 +5,8 @@ The search space is the cross-product the plan layer exposes:
   grid       R x C factorizations (core/distributed.grid_candidates) when
              searching over a device count; fixed by the mesh otherwise.
   schedule   fused | pipelined | chunked (+ n_steps, y_chunks candidates)
-  reduce     psum | scatter
-  precision  fp32 | bf16 | fp16
+  reduce     psum | scatter | scatter_bf16 (half-width compensated scatter)
+  precision  fp32 | bf16 | fp16 | fp8_e4m3 (quarter-width + scale sidecar)
   impl       factorized | kernel (| reference)
 
 Candidates that violate the pipeline's divisibility rules are skipped (for
@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Optional, Sequence
 
-from repro.core.distributed import IFDKGrid, grid_candidates
+from repro.core.distributed import IFDKGrid, SCATTER_REDUCES, grid_candidates
 from repro.core.geometry import CBCTGeometry
 from repro.core.perf_model import (
     ABCI, MachineSpec, PerfBreakdown, gups_end_to_end,
@@ -34,8 +34,8 @@ from .feasibility import DEFAULT_HBM_BYTES, MemoryFootprint, check_feasible, \
     plan_footprint
 
 _SCHEDULE_ORDER = ("fused", "pipelined", "chunked")
-_REDUCE_ORDER = ("psum", "scatter")
-_PRECISION_ORDER = ("fp32", "bf16", "fp16")
+_REDUCE_ORDER = ("psum", "scatter", "scatter_bf16")
+_PRECISION_ORDER = ("fp32", "bf16", "fp16", "fp8_e4m3")
 
 DEFAULT_N_STEPS = (1, 2, 4, 8)
 DEFAULT_Y_CHUNKS = (2, 4, 8, 16)
@@ -84,7 +84,7 @@ def _rank_key(p: PlanProposal):
 def enumerate_points(g: CBCTGeometry, grid: IFDKGrid, *,
                      schedules: Sequence[str] = _SCHEDULE_ORDER,
                      reduces: Sequence[str] = _REDUCE_ORDER,
-                     precisions: Sequence[str] = ("fp32", "bf16", "fp16"),
+                     precisions: Sequence[str] = _PRECISION_ORDER,
                      impls: Sequence[str] = ("factorized", "kernel"),
                      n_steps_candidates: Sequence[int] = DEFAULT_N_STEPS,
                      y_chunks_candidates: Sequence[int] = DEFAULT_Y_CHUNKS,
@@ -103,7 +103,7 @@ def enumerate_points(g: CBCTGeometry, grid: IFDKGrid, *,
         for n_steps in steps:
             for y_chunks in chunk_opts:
                 for reduce in reduces:
-                    if reduce == "scatter" and grid.c == 1:
+                    if reduce in SCATTER_REDUCES and grid.c == 1:
                         continue  # nothing to scatter over
                     for precision in precisions:
                         for impl in impls:

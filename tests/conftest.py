@@ -25,11 +25,27 @@ os.environ.setdefault(
 
 jax.config.update("jax_enable_x64", False)
 
+# The fast tier is compile-bound (hundreds of small jitted engines), not
+# compute-bound: XLA's persistent compilation cache cuts repeat runs on the
+# same machine by roughly a third. Keyed by HLO, so it can never change
+# results — only skip recompiles. REPRO_COMPILE_CACHE=off disables it;
+# any other value overrides the cache directory.
+_cc = os.environ.get("REPRO_COMPILE_CACHE", "")
+if _cc.lower() not in ("off", "0"):
+    jax.config.update(
+        "jax_compilation_cache_dir",
+        _cc or os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "xla_cache"))
+    # Only persist compiles that cost real time — writing every trivial
+    # executable to disk costs more on the cold run than it saves warm.
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+
 
 def pytest_configure(config):
-    # Fast tier: `pytest -m "not slow"` (~90 s on this container, vs ~6 min
-    # full) skips the multi-minute subprocess/distributed runs and the
-    # heavyweight LM smoke configs; the full suite runs everything.
+    # Fast tier: `pytest -m "not slow"` (~80 s warm on this container, vs
+    # ~7 min full — see DESIGN.md §Test tiers) skips the multi-minute
+    # subprocess/distributed runs and the heavyweight LM smoke configs;
+    # the full suite runs everything (nightly CI).
     config.addinivalue_line(
         "markers",
         "slow: multi-minute subprocess/distributed or heavyweight smoke "

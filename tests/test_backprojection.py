@@ -71,7 +71,9 @@ class TestDualSlab:
 class TestEquivalence:
     """The paper's validation: factorized output == reference (RMSE < 1e-5)."""
 
-    @pytest.mark.parametrize("n,n_proj", [(16, 8), (24, 12)])
+    # (16, 12) was (24, 12): the second point only needs a distinct
+    # (size, view-count) pair, not a bigger volume — fast-tier diet.
+    @pytest.mark.parametrize("n,n_proj", [(16, 8), (16, 12)])
     def test_reference_vs_factorized(self, n, n_proj):
         g = default_geometry(n, n_proj=n_proj)
         pm = jnp.asarray(projection_matrices(g))

@@ -10,7 +10,10 @@ from repro.core.phantom import forward_project, shepp_logan_volume
 
 @pytest.fixture(scope="module")
 def small_case():
-    g = default_geometry(32, n_proj=48)
+    # 24^3/36 (was 32^3/48): the smallest geometry where all three impls
+    # and the windows still exercise distinct code paths — part of the
+    # fast-tier diet (DESIGN.md §Test tiers).
+    g = default_geometry(24, n_proj=36)
     return g, forward_project(g), shepp_logan_volume(g)
 
 
@@ -25,23 +28,27 @@ class TestReconstruction:
         assert float(jnp.max(jnp.abs(ker - ref))) / scale < 1e-4
 
     def test_phantom_recovery(self, small_case):
-        """Interior RMSE < 0.15 at 32^3/48 views; mean density of the big
-        flat region within 0.05 of truth."""
+        """Interior RMSE < 0.17 at 24^3/36 views (measured 0.159; the old
+        0.15 bound was calibrated at 32^3/48 — fewer views reconstruct a
+        bit noisier); mean density of the big flat region within 0.05 of
+        truth."""
         g, proj, ph = small_case
         vol = reconstruct(g, proj, impl="factorized")
         m = g.n_x // 5
         interior = (slice(m, g.n_x - m),) * 3
         rmse = float(jnp.sqrt(jnp.mean((vol[interior] - ph[interior]) ** 2)))
-        assert rmse < 0.15
+        assert rmse < 0.17
         flat = (ph[interior] > 0.15) & (ph[interior] < 0.25)
         err = float(jnp.abs(jnp.mean(vol[interior][flat])
                             - jnp.mean(ph[interior][flat])))
         assert err < 0.05
 
     def test_resolution_convergence(self):
-        """RMSE decreases with resolution/views (consistency of the method)."""
+        """RMSE decreases with resolution/views (consistency of the method).
+        The 24^3/36 endpoint shares the module fixture's plan, so only the
+        12^3 point compiles fresh."""
         rmses = []
-        for n, npj in [(16, 24), (32, 48)]:
+        for n, npj in [(12, 18), (24, 36)]:
             g = default_geometry(n, n_proj=npj)
             vol = reconstruct(g, forward_project(g))
             ph = shepp_logan_volume(g)

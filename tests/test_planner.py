@@ -315,6 +315,127 @@ class TestSearch:
             assert plan.resolved_precision().storage == p.point.precision
 
 
+class TestStreamCodecPlanner:
+    """ISSUE 5: the planner prices the stream codecs — fp8_e4m3 wire bytes
+    (+ scale sidecar) and the scatter_bf16 half-width reduce — with the
+    same formulas the engine moves bytes by."""
+
+    def test_search_space_includes_new_tokens(self):
+        """`plan_from_spec(g, "auto")`'s search space (the default
+        enumerate axes) contains fp8_e4m3 storage and scatter_bf16."""
+        g = default_geometry(16, n_proj=8)
+        pts = list(enumerate_points(g, IFDKGrid(r=2, c=4)))
+        assert any(p.precision == "fp8_e4m3" for p in pts)
+        assert any(p.reduce == "scatter_bf16" for p in pts)
+        # and the planner's spec strings for them parse right back
+        pt8 = next(p for p in pts if p.precision == "fp8_e4m3"
+                   and p.reduce == "scatter_bf16")
+        plan = plan_from_spec(g, pt8.spec())
+        assert plan.resolved_precision().storage == "fp8_e4m3"
+        assert plan.reduce == "scatter_bf16"
+
+    def test_fp8_quarters_allgather_time(self):
+        g = paper_problem()
+        f32 = predict_point(g, PlanPoint(grid=GRID_256, precision="fp32"))
+        fp8 = predict_point(g, PlanPoint(grid=GRID_256,
+                                         precision="fp8_e4m3"))
+        # 1/4 of the data bytes + the (tiny) scale sidecar
+        assert fp8.t_allgather < f32.t_allgather / 4 * 1.01
+        assert fp8.t_allgather > f32.t_allgather / 4  # sidecar is priced
+
+    def test_fp8_outranks_bf16_when_allgather_bound(self):
+        g = default_geometry(16, n_proj=8)
+        ag_bound = dataclasses.replace(ABCI, th_allgather=1e-3)
+        props = search_plans(g, None, system=ag_bound,
+                             precisions=("bf16", "fp8_e4m3"),
+                             schedules=("pipelined",),
+                             n_steps_candidates=(2,),
+                             impls=("factorized",), top_k=8)
+        assert [p.point.precision for p in props] == ["fp8_e4m3", "bf16"]
+        assert props[0].predicted == pytest.approx(props[1].predicted / 2,
+                                                   rel=0.1)
+
+    def test_scatter_bf16_halves_reduce_term(self):
+        g = paper_problem()
+        sc = predict_point(g, PlanPoint(grid=GRID_256, reduce="scatter"))
+        hf = predict_point(g, PlanPoint(grid=GRID_256,
+                                        reduce="scatter_bf16"))
+        assert hf.t_reduce == pytest.approx(sc.t_reduce / 2)
+
+    def test_wire_byte_accounting(self):
+        from repro.planner.cost import (
+            allgather_wire_bytes, reduce_wire_bytes,
+        )
+        g = paper_problem()
+        ag = {p: allgather_wire_bytes(g, PlanPoint(grid=GRID_256,
+                                                   precision=p))
+              for p in ("fp32", "bf16", "fp8_e4m3")}
+        assert ag["bf16"] * 2 == ag["fp32"]
+        sidecar_moved = 256 * (4 * (g.n_proj // 8)) * 31 // 32
+        assert ag["fp8_e4m3"] == ag["fp32"] // 4 + sidecar_moved
+        rd = {r: reduce_wire_bytes(g, PlanPoint(grid=GRID_256, reduce=r))
+              for r in ("psum", "scatter", "scatter_bf16")}
+        assert rd["psum"] == 2 * rd["scatter"]
+        assert rd["scatter_bf16"] * 2 == rd["scatter"]
+        # nothing moves on a 1-rank axis
+        assert allgather_wire_bytes(g, PlanPoint(grid=IFDKGrid(r=1,
+                                                               c=8))) == 0
+        assert reduce_wire_bytes(g, PlanPoint(grid=IFDKGrid(r=32,
+                                                            c=1))) == 0
+
+    def test_reduce_wire_bytes_multipod_scatters_data_axis_only(self):
+        """The engine's scatter epilogue runs over the DATA axis and
+        finishes across pods with an f32 psum of the 1/D-scattered slab —
+        the accounting must NOT bill the whole C-column at bf16 width."""
+        from repro.planner.cost import reduce_wire_bytes
+        g = paper_problem()
+        slab4 = (g.n_x // 32) * g.n_y * g.n_z * 4
+        pt = PlanPoint(grid=GRID_256, reduce="scatter_bf16", data_size=2)
+        # bf16 ring over the 2 data ranks + f32 allreduce over the 4 pods
+        # of the half-slab
+        per_rank = (slab4 // 2) * 1 // 2 + 2 * (slab4 // 2) * 3 // 4
+        assert reduce_wire_bytes(g, pt) == 256 * per_rank
+        # single-pod (data_size == c): pure half-width ring, no finish term
+        single = PlanPoint(grid=GRID_256, reduce="scatter_bf16",
+                           data_size=8)
+        full = PlanPoint(grid=GRID_256, reduce="scatter", data_size=8)
+        assert (reduce_wire_bytes(g, single) * 2
+                == reduce_wire_bytes(g, full))
+
+    def test_footprint_counts_sidecar_and_carry(self):
+        g = default_geometry(16, n_proj=64)
+        grid = IFDKGrid(r=1, c=1)
+        f32 = plan_footprint(g, PlanPoint(grid=grid, precision="fp32"))
+        fp8 = plan_footprint(g, PlanPoint(grid=grid, precision="fp8_e4m3"))
+        # wire-format gathered batch: a quarter of f32 + 4 B/projection
+        assert fp8.gathered == f32.gathered // 4 + 4 * g.n_proj
+        # the compensated reduce's f32 error-feedback carry costs a full
+        # slab of memory under the chunked schedule
+        grid2 = IFDKGrid(r=1, c=2)
+        plain = plan_footprint(g, PlanPoint(
+            grid=grid2, schedule="chunked", n_steps=2, y_chunks=4,
+            reduce="scatter"))
+        comp = plan_footprint(g, PlanPoint(
+            grid=grid2, schedule="chunked", n_steps=2, y_chunks=4,
+            reduce="scatter_bf16"))
+        assert comp.slab == plain.slab + g.n_x * g.n_y * g.n_z * 4
+
+    def test_scatter_bf16_writer_count_matches_scatter(self):
+        from repro.planner.cost import io_writers
+        assert (io_writers(PlanPoint(grid=GRID_256, reduce="scatter_bf16"))
+                == io_writers(PlanPoint(grid=GRID_256, reduce="scatter")))
+
+    def test_search_grids_accepts_pinned_new_tokens(self):
+        """The benchmark CLI path: restricting the axes to the new tokens
+        yields a ranked table of only those plans."""
+        g = paper_problem()
+        props = search_grids(g, 256, precisions=("fp8_e4m3",),
+                             reduces=("scatter_bf16",), top_k=4)
+        assert props
+        assert all(p.point.precision == "fp8_e4m3" for p in props)
+        assert all(p.point.reduce == "scatter_bf16" for p in props)
+
+
 # ---------------------------------------------------------------------------
 # auto_plan / plan_from_spec("auto") wiring
 # ---------------------------------------------------------------------------

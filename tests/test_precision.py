@@ -1,4 +1,4 @@
-"""Storage-precision policy (fp16/bf16 stream, f32 accumulate) and the
+"""Stream codecs (fp32/bf16/fp16/fp8 wire formats, f32 accumulate) and the
 VMEM-budget kernel autotuner."""
 import jax
 import jax.numpy as jnp
@@ -8,18 +8,20 @@ import pytest
 from repro.core.backprojection import (
     backproject_factorized, backproject_reference,
 )
-from repro.core.distributed import input_sharding, make_distributed_fdk
+from repro.core.distributed import IFDKGrid, input_sharding, \
+    make_distributed_fdk
 from repro.core.fdk import reconstruct
 from repro.core.filtering import filter_projections
 from repro.core.geometry import default_geometry, projection_matrices
 from repro.core.phantom import forward_project, shepp_logan_volume
+from repro.core.plan import ReconstructionPlan
 from repro.core.precision import (
-    Precision, default_storage, psnr, resolve_precision,
+    CODECS, Precision, codec_for, default_storage, psnr, resolve_precision,
 )
 from repro.kernels.backproject import tune
 from repro.kernels.backproject.kernel import vmem_bytes
-from repro.kernels.backproject.ops import backproject_pallas
-from repro.parallel.mesh import single_device_mesh
+from repro.kernels.backproject.ops import backproject_mxu, backproject_pallas
+from repro.parallel.mesh import make_mesh, single_device_mesh
 
 STORAGES = ("fp32", "bf16", "fp16")
 
@@ -74,6 +76,159 @@ class TestPrecisionPolicy:
         assert Precision("fp32").rmse_tol() == pytest.approx(1e-5)
         assert Precision("fp16").rmse_tol() > Precision("fp32").rmse_tol()
         assert Precision("bf16").rmse_tol() > Precision("fp16").rmse_tol()
+        assert Precision("fp8_e4m3").rmse_tol() > Precision("bf16").rmse_tol()
+
+    def test_fp8_aliases(self):
+        for alias in ("fp8", "e4m3", "float8_e4m3fn"):
+            assert Precision(alias).storage == "fp8_e4m3"
+        assert Precision("fp8_e4m3").storage_dtype == jnp.float8_e4m3fn
+        assert Precision("fp8_e4m3").storage_bytes == 1
+
+
+class TestStreamCodecs:
+    """The codec layer itself: wire formats, scale sidecars, and the
+    engine/cost-model agreement on wire bytes (ISSUE 5 acceptance)."""
+
+    @pytest.fixture(scope="class")
+    def q32(self):
+        g = default_geometry(16, n_proj=8)
+        return g, filter_projections(g, forward_project(g),
+                                     out_dtype=jnp.float32)
+
+    def test_registry(self):
+        assert set(CODECS) == {"fp32", "bf16", "fp16", "fp8_e4m3"}
+        for name, codec in CODECS.items():
+            assert codec is codec_for(name)
+            assert codec is Precision(name).codec
+            assert (codec.wire_bytes_per_sample
+                    == jnp.dtype(codec.wire_dtype).itemsize)
+        assert not CODECS["fp32"].has_scales
+        assert not CODECS["bf16"].has_scales
+        assert CODECS["fp16"].has_scales      # scale-on-overflow
+        assert CODECS["fp8_e4m3"].has_scales  # normalizing
+
+    def test_scale_free_encode_bitmatches_cast(self, q32):
+        """bf16 (and f32) codecs are byte-identical to the historical
+        plain-cast policy."""
+        _, q = q32
+        for name in ("fp32", "bf16"):
+            data, scales = CODECS[name].encode(q)
+            assert scales is None
+            assert data.dtype == CODECS[name].wire_dtype
+            assert bool(jnp.all(data == q.astype(CODECS[name].wire_dtype)))
+
+    def test_fp16_in_range_bitmatches_cast(self, q32):
+        """In-range streams: fp16 scales are exactly 1.0 and the data bits
+        equal the naive cast (the historical behaviour)."""
+        _, q = q32
+        data, scales = CODECS["fp16"].encode(q)
+        assert bool(jnp.all(scales == 1.0))
+        assert bool(jnp.all(data == q.astype(jnp.float16)))
+
+    def test_fp16_scales_on_overflow(self, q32):
+        """Beyond-65504 projections encode finite and decode accurately
+        (the overflow hazard the old docstring only warned about)."""
+        _, q = q32
+        big = q.astype(jnp.float32) * 3e5   # max |q| >> fp16 max
+        assert not bool(jnp.all(jnp.isfinite(big.astype(jnp.float16))))
+        data, scales = CODECS["fp16"].encode(big)
+        assert bool(jnp.all(jnp.isfinite(data.astype(jnp.float32))))
+        assert bool(jnp.any(scales > 1.0))
+        dec = CODECS["fp16"].decode(data, scales)
+        err = float(jnp.max(jnp.abs(dec - big))) / float(jnp.max(jnp.abs(big)))
+        assert err < 2 * Precision("fp16").eps()
+
+    def test_fp8_roundtrip_error_bound(self, q32):
+        """encode/decode is a per-projection-relative quantization: each tap
+        is recovered within eps/2 of the projection's max-abs."""
+        _, q = q32
+        codec = CODECS["fp8_e4m3"]
+        data, scales = codec.encode(q)
+        assert data.dtype == jnp.float8_e4m3fn
+        assert scales.shape == (q.shape[0],) and scales.dtype == jnp.float32
+        dec = codec.decode(data, scales)
+        amax = jnp.max(jnp.abs(q.astype(jnp.float32)), axis=(-2, -1))
+        per_proj = jnp.max(jnp.abs(dec - q), axis=(-2, -1)) / amax
+        assert float(jnp.max(per_proj)) <= 0.5 * Precision("fp8_e4m3").eps()
+
+    def test_fp8_zero_projection_is_exact(self):
+        codec = CODECS["fp8_e4m3"]
+        data, scales = codec.encode(jnp.zeros((3, 4, 4), jnp.float32))
+        assert bool(jnp.all(scales == 1.0))
+        assert bool(jnp.all(codec.decode(data, scales) == 0.0))
+
+    def test_decode_requires_sidecar(self):
+        with pytest.raises(ValueError, match="scale"):
+            CODECS["fp8_e4m3"].decode(
+                jnp.zeros((2, 4, 4), jnp.float8_e4m3fn))
+
+    def test_fp8_wire_bytes_quarter_of_f32(self, q32):
+        """ISSUE 5 acceptance: the cost model and the engine agree that fp8
+        AllGather wire bytes are 1/4 of f32 plus the scale sidecar — the
+        encoded arrays, `Precision.wire_bytes`, and the planner's AllGather
+        accounting are the same number."""
+        from repro.planner.cost import allgather_wire_bytes, PlanPoint
+        g, q = q32
+        fp8 = Precision("fp8_e4m3")
+        enc = fp8.codec.encode(q)
+        n, v, u = g.n_proj, g.n_v, g.n_u
+        # engine side: actual encoded bytes
+        assert enc.nbytes == n * v * u + 4 * n
+        # policy side: one formula
+        assert fp8.wire_bytes(n, v, u) == enc.nbytes
+        assert (fp8.wire_bytes(n, v, u)
+                == Precision("fp32").wire_bytes(n, v, u) // 4 + 4 * n)
+        assert fp8.allgather_bytes(n, v, u) == fp8.wire_bytes(n, v, u)
+        # cost-model side: the AllGather accounting prices the same bytes
+        grid = IFDKGrid(r=2, c=1)
+        ag8 = allgather_wire_bytes(g, PlanPoint(grid=grid,
+                                                precision="fp8_e4m3"))
+        ag32 = allgather_wire_bytes(g, PlanPoint(grid=grid,
+                                                 precision="fp32"))
+        n_ranks, moved = grid.n_ranks, (grid.r - 1) / grid.r
+        assert ag8 == int(n_ranks * moved * fp8.wire_bytes(n, v, u))
+        assert ag8 == ag32 // 4 + int(n_ranks * moved * 4 * n)
+
+    @pytest.mark.parametrize(
+        "bp", [backproject_reference, backproject_factorized,
+               backproject_pallas, backproject_mxu],
+        ids=["reference", "factorized", "kernel", "mxu"],
+    )
+    def test_every_backprojector_dequantizes_fp8(self, case16, bp):
+        """All four implementations decode the fp8 stream via the scale
+        sidecar (taps dequantize before the f32 FMA) and agree with the f32
+        oracle within the fp8 tolerance."""
+        g, proj, pm, oracle = case16
+        q = filter_projections(g, proj, out_dtype=jnp.float32)
+        data, scales = CODECS["fp8_e4m3"].encode(q)
+        out = bp(pm, data, g.n_x, g.n_y, g.n_z, scales=scales)
+        assert out.dtype == jnp.float32
+        p = Precision("fp8_e4m3")
+        scale = float(jnp.max(jnp.abs(oracle))) + 1e-12
+        rmse = float(jnp.sqrt(jnp.mean((out - oracle) ** 2))) / scale
+        assert rmse < p.rmse_tol(), f"fp8 rmse {rmse:.3e}"
+
+
+class TestFp16OverflowRegression:
+    """ISSUE 5 satellite: ramp-filtered projections of a high-contrast scan
+    exceed fp16's 65504 — the naive cast poisons the volume with inf/nan,
+    the fp16 codec's scale-on-overflow keeps full fp16 accuracy."""
+
+    def test_high_contrast_phantom(self, case16):
+        g, proj, _, _ = case16
+        big = proj * np.float32(1e6)        # filtered stream peaks ~ 1e6
+        q = filter_projections(g, big, out_dtype=jnp.float32)
+        assert float(jnp.max(jnp.abs(q))) > 65504.0  # genuinely overflows
+        naive = q.astype(jnp.float16)
+        assert not bool(jnp.all(jnp.isfinite(naive.astype(jnp.float32))))
+        oracle = np.asarray(ReconstructionPlan(geometry=g).build()(big))
+        out = np.asarray(
+            ReconstructionPlan(geometry=g, precision="fp16").build()(big))
+        assert np.all(np.isfinite(out))
+        p = Precision("fp16")
+        scale = float(np.max(np.abs(oracle))) + 1e-12
+        rmse = float(np.sqrt(np.mean((out - oracle) ** 2))) / scale
+        assert rmse < p.rmse_tol(), f"overflow rmse {rmse:.3e}"
 
 
 class TestLowPrecisionBackprojection:
@@ -143,6 +298,51 @@ class TestGoldenPSNR:
         interior = (slice(m, g.n_x - m),) * 3
         got = psnr(np.array(vol[interior]), np.array(ph[interior]))
         assert got > self.FLOOR_DB, f"{impl}/{storage}: {got:.2f} dB"
+
+
+class TestQuantizationStudy:
+    """ISSUE 5 satellite: PSNR sweep of the codec ladder against the f32
+    Shepp-Logan oracle (the f32 reconstruction, 16^3 / 24 views).
+
+    Measured on this geometry: bf16 ~76 dB, fp16 ~94 dB, fp8_e4m3 ~52 dB.
+    FP8_FLOOR_DB is the documented fp8 regression floor (a few dB under the
+    measured value, the same convention as TestGoldenPSNR.FLOOR_DB); the
+    ordering assertion pins the physics: narrower storage can only lose
+    fidelity — fp32 >= bf16 >= fp8.
+    """
+
+    FP8_FLOOR_DB = 48.0
+    BF16_FLOOR_DB = 70.0
+
+    @pytest.fixture(scope="class")
+    def sweep(self):
+        g = default_geometry(16, n_proj=24)
+        proj = forward_project(g)
+        mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+        oracle = np.asarray(ReconstructionPlan(geometry=g).build()(proj))
+        vols = {}
+        for storage in ("fp32", "bf16", "fp8_e4m3"):
+            # the 1x1x1-mesh engine: the fp8 acceptance path of ISSUE 5
+            plan = ReconstructionPlan(geometry=g, mesh=mesh,
+                                      precision=storage)
+            vols[storage] = np.asarray(plan.build()(
+                jax.device_put(proj, input_sharding(mesh))))
+        return oracle, vols
+
+    def test_psnr_ordering(self, sweep):
+        oracle, vols = sweep
+        db = {s: psnr(v, oracle) for s, v in vols.items()}
+        assert db["fp32"] >= db["bf16"] >= db["fp8_e4m3"], db
+
+    def test_fp8_engine_clears_documented_floor(self, sweep):
+        oracle, vols = sweep
+        got = psnr(vols["fp8_e4m3"], oracle)
+        assert got > self.FP8_FLOOR_DB, f"fp8: {got:.2f} dB"
+
+    def test_bf16_engine_clears_documented_floor(self, sweep):
+        oracle, vols = sweep
+        got = psnr(vols["bf16"], oracle)
+        assert got > self.BF16_FLOOR_DB, f"bf16: {got:.2f} dB"
 
 
 class TestAutotuner:

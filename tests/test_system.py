@@ -15,8 +15,10 @@ from repro.serving import greedy_generate
 
 
 def test_full_ct_pipeline_public_api():
-    """projections -> filter -> back-project -> volume, via reconstruct()."""
-    g = default_geometry(24, n_proj=36)
+    """projections -> filter -> back-project -> volume, via reconstruct().
+    16^3/32 (was 24^3/36): the public-API path is what is under test, not
+    resolution — fast-tier diet (DESIGN.md §Test tiers)."""
+    g = default_geometry(16, n_proj=32)
     proj = forward_project(g)
     vol = reconstruct(g, proj, impl="kernel")
     ph = shepp_logan_volume(g)
