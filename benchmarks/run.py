@@ -27,13 +27,14 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main(argv=None) -> None:
     from benchmarks import (
         bench_backprojection, bench_end_to_end, bench_filtering, bench_io,
-        bench_scaling_model, plan_search, roofline_table,
+        bench_scaling_model, bench_streaming, plan_search, roofline_table,
     )
     suites = [
         ("table4", bench_backprojection.run),     # BP kernel GUPS sweep
         ("filtering", bench_filtering.run),       # TH_flt micro-benchmark
         ("table5_fig5", bench_scaling_model.run),  # scaling model vs paper
         ("fig6", bench_end_to_end.run),           # end-to-end GUPS
+        ("streaming", bench_streaming.run),       # time-from-last-delta
         ("roofline", roofline_table.run),         # dry-run roofline terms
         ("plan_search", plan_search.run),         # auto-planner ranked table
         ("io", bench_io.run),                     # shard-store read/write GB/s
@@ -51,9 +52,14 @@ def main(argv=None) -> None:
                          "e.g. 'schedule=pipelined,n_steps=2,precision=bf16'"
                          " — or 'auto' to let the planner pick "
                          "(repro/planner)")
+    ap.add_argument("--json", action="store_true",
+                    help="additionally persist each suite's rows as "
+                         "BENCH_<suite>.json at the repo root (the "
+                         "PR-over-PR perf trajectory files)")
     args = ap.parse_args(argv)
 
     selected = [s for s in suites if not args.suite or s[0] in args.suite]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in selected:
@@ -71,6 +77,9 @@ def main(argv=None) -> None:
             continue
         for row, us, derived in rows:
             print(f"{row},{us:.1f},{derived}")
+        if args.json:
+            bench_streaming.write_json(
+                os.path.join(root, f"BENCH_{name}.json"), rows)
     if failures:
         sys.exit(1)
 

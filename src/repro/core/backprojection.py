@@ -90,12 +90,17 @@ def _stream_scales(proj: Array, scales: Array | None) -> Array:
 @partial(jax.jit, static_argnames=("nx", "ny", "nz"))
 def backproject_reference(pmats: Array, proj: Array,
                           nx: int, ny: int, nz: int,
-                          scales: Array | None = None) -> Array:
+                          scales: Array | None = None,
+                          init: Array | None = None) -> Array:
     """Alg. 2: for each projection s, 3 inner products per voxel.
 
     pmats: (N_p, 3, 4) float32; proj: (N_p, N_v, N_u) filtered projections
     in any wire dtype (fp32/bf16/fp16/fp8 — the stream codec's output);
     `scales` is the codec's per-projection sidecar (None = unscaled).
+    `init` (default zeros) seeds the accumulator, continuing the per-voxel
+    addition sequence of an earlier call — the incremental schedule folds
+    projection deltas through it so a split scan stays bit-identical to
+    one fused scan over the concatenated projections.
     Returns volume (nx, ny, nz), *unscaled* (see fdk.fdk_scale).
     """
     i = jnp.arange(nx, dtype=jnp.float32)[:, None, None]
@@ -114,8 +119,9 @@ def backproject_reference(pmats: Array, proj: Array,
         acc = acc + w * bilinear_gather(q, v, u)  # rows = v, cols = u
         return acc, None
 
-    init = jnp.zeros((nx, ny, nz), jnp.float32)
-    vol, _ = jax.lax.scan(body, init,
+    if init is None:
+        init = jnp.zeros((nx, ny, nz), jnp.float32)
+    vol, _ = jax.lax.scan(body, init.astype(jnp.float32),
                           (pmats, proj, _stream_scales(proj, scales)))
     return vol
 
@@ -142,7 +148,8 @@ def column_terms(p: Array, nx: int, ny: int) -> Tuple[Array, Array, Array, Array
 @partial(jax.jit, static_argnames=("nx", "ny", "nz"))
 def backproject_factorized(pmats: Array, proj: Array,
                            nx: int, ny: int, nz: int,
-                           scales: Array | None = None) -> Array:
+                           scales: Array | None = None,
+                           init: Array | None = None) -> Array:
     """Alg. 4: factorized coordinates + Z-symmetry + transposed layout.
 
     Matches backproject_reference to float32 reassociation tolerance whenever
@@ -153,6 +160,11 @@ def backproject_factorized(pmats: Array, proj: Array,
     mirror half is stored z-reversed, so no per-projection flip/concat
     touches the volume (measured 1.9x on CPU, EXPERIMENTS.md §Perf); a
     single relayout at the end restores (nx, ny, nz).
+
+    `init` (default zeros) seeds the accumulator in the CANONICAL
+    (nx, ny, nz) layout; it is split into the dual slabs so the per-voxel
+    addition sequence continues exactly where an earlier call stopped —
+    the incremental schedule's bit-exact fold.
     """
     if nz % 2 != 0:
         raise ValueError("factorized back-projection requires even N_z (T1 pairing)")
@@ -173,9 +185,14 @@ def backproject_factorized(pmats: Array, proj: Array,
         back = w[..., None] * bilinear_gather(qt, ub, vm)
         return (acc_f + front, acc_b + back), None
 
-    zeros = jnp.zeros((nx, ny, nzh), jnp.float32)
+    if init is None:
+        init_f = init_b = jnp.zeros((nx, ny, nzh), jnp.float32)
+    else:
+        init = init.astype(jnp.float32)
+        init_f = init[..., :nzh]
+        init_b = jnp.flip(init[..., nzh:], axis=-1)
     (acc_f, acc_b), _ = jax.lax.scan(
-        body, (zeros, zeros), (pmats, proj, _stream_scales(proj, scales)))
+        body, (init_f, init_b), (pmats, proj, _stream_scales(proj, scales)))
     # single relayout: back half is voxel nz-1-k at index k
     return jnp.concatenate([acc_f, jnp.flip(acc_b, axis=-1)], axis=-1)
 

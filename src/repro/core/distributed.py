@@ -67,10 +67,26 @@ def choose_grid(g: CBCTGeometry, n_devices: int,
     that divides n_devices.
     """
     vol_bytes = 4 * g.n_x * g.n_y * g.n_z
+    det_bytes = 4 * g.n_u * g.n_v * 32
+    # Doubling R only shrinks the slab term vol_bytes/r: if the per-rank
+    # detector working set ALONE does not fit, no R ever satisfies the loop
+    # condition below and it spins forever. Fail loudly instead.
+    if det_bytes >= hbm_bytes:
+        raise ValueError(
+            f"detector working set ({det_bytes / 2**30:.2f} GiB for "
+            f"{g.n_u} x {g.n_v} projections) alone exceeds "
+            f"hbm_bytes={hbm_bytes / 2**30:.2f} GiB — no slab count R can "
+            "fit this geometry; reduce the detector or raise hbm_bytes")
     r = 1
-    while vol_bytes / r > sub_vol_bytes or (4 * g.n_u * g.n_v * 32
+    while vol_bytes / r > sub_vol_bytes or (det_bytes
                                             + vol_bytes / r) > hbm_bytes:
         r *= 2
+    if g.n_x % r:
+        # Caught here, where the number came from, instead of much later by
+        # ReconstructionPlan.validate() on a grid the caller never chose.
+        raise ValueError(
+            f"memory bound needs R={r} volume slabs, but R={r} does not "
+            f"tile N_x={g.n_x}; pad the volume or raise sub_vol_bytes")
     if r > n_devices:
         raise ValueError(
             f"volume needs R={r} slabs but only {n_devices} devices available"

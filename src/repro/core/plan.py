@@ -35,17 +35,20 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Literal, Optional, Tuple
+from typing import Callable, Literal, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import numpy as np
 
 from repro.compat import shard_map
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
 from .distributed import (
-    IFDKGrid, SCATTER_REDUCES, _proj_spec, output_spec, shift_pmats_i,
+    IFDKGrid, SCATTER_REDUCES, _proj_spec, input_sharding, output_spec,
+    shift_pmats_i,
 )
 from .fdk import BpImpl, _get_backprojector, fdk_scale
 from .filtering import _WINDOWS, make_filter
@@ -54,10 +57,10 @@ from .precision import Precision, resolve_precision
 
 Array = jax.Array
 
-Schedule = Literal["fused", "pipelined", "chunked"]
+Schedule = Literal["fused", "pipelined", "chunked", "incremental"]
 ReduceMode = Literal["psum", "scatter", "scatter_bf16"]
 
-_SCHEDULES = ("fused", "pipelined", "chunked")
+_SCHEDULES = ("fused", "pipelined", "chunked", "incremental")
 _REDUCES = ("psum",) + SCATTER_REDUCES
 _IMPLS = ("reference", "factorized", "kernel")
 _PRECISIONS = ("fp32", "bf16", "fp16", "fp8_e4m3")
@@ -91,6 +94,25 @@ def shift_pmats_j(pmats: Array, j0) -> Array:
     as distributed.shift_pmats_i, on the j column)."""
     shift = pmats[..., :, 1] * j0
     return pmats.at[..., :, 3].add(shift)
+
+
+@dataclasses.dataclass
+class _Stages:
+    """The engine's shared per-rank stage primitives, composed once per plan
+    and reused by every schedule's rank function AND the incremental
+    session (`build_incremental`) — the one place the filter/encode/gather,
+    slab reparameterization and row-reduce logic is defined."""
+
+    gather_batch: Callable   # (pm_b, raw_b) -> (pm_col, q_col, scales_col)
+    slab_pmats: Callable     # pm_col -> P shifted to this rank's x-slab
+    reduce_slab: Callable    # full-slab row-reduce epilogue (fused/pipelined)
+    backproject: Callable    # resolved impl (tuned blocks for "kernel")
+    nx_slab: int
+    scale: float             # fdk_scale(geometry)
+    model_axis: Optional[str]
+    data_axis: Optional[str]
+    pod_axis: Optional[str]
+    dp: Tuple[str, ...]      # row-reduce axes present on the mesh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -308,8 +330,10 @@ class ReconstructionPlan:
             return P(AXIS_MODEL, None, AXIS_DATA, None)
         return output_spec(self.mesh, self.reduce)
 
-    def _build_rank_fn(self) -> Callable[[Array, Array], Array]:
-        """Compose the shared stage primitives into one per-rank function."""
+    def _make_stages(self) -> _Stages:
+        """Compose the shared stage primitives for this plan's mesh/precision
+        — the building blocks both `_build_rank_fn` (batch schedules) and
+        `IncrementalSession` (streaming) assemble their rank functions from."""
         g = self.geometry
         mesh = self.mesh
         grid = self.grid
@@ -321,16 +345,12 @@ class ReconstructionPlan:
                     and AXIS_POD in mesh.axis_names else None)
         dp = tuple(a for a in (pod_axis, data_axis) if a is not None)
         nx_slab = g.n_x // grid.r
-        n_steps = self.n_steps
-        nb = g.n_proj // grid.n_ranks // n_steps
-        scale = fdk_scale(g)
         prec = self.resolved_precision()
         codec = prec.codec
         # The filter emits f32; the stream codec owns the quantization to
         # the wire format (scale-free codecs are a plain cast — fused under
         # jit, byte-identical to casting inside the filter).
         filt = make_filter(g, self.window, out_dtype=jnp.float32)
-        backproject = self._resolve_backprojector()
 
         # --- stage: filter + encode + column AllGather (paper Fig. 3b) -----
         # The AllGather moves the codec's WIRE format: quantized data plus,
@@ -373,6 +393,31 @@ class ReconstructionPlan:
             for a in dp:
                 slab = lax.psum(slab, a)
             return slab
+
+        return _Stages(
+            gather_batch=gather_batch, slab_pmats=slab_pmats,
+            reduce_slab=reduce_slab,
+            backproject=self._resolve_backprojector(),
+            nx_slab=nx_slab, scale=fdk_scale(g),
+            model_axis=model_axis, data_axis=data_axis, pod_axis=pod_axis,
+            dp=dp,
+        )
+
+    def _build_rank_fn(self) -> Callable[[Array, Array], Array]:
+        """Compose the shared stage primitives into one per-rank function."""
+        g = self.geometry
+        grid = self.grid
+        st = self._make_stages()
+        gather_batch = st.gather_batch
+        slab_pmats = st.slab_pmats
+        reduce_slab = st.reduce_slab
+        backproject = st.backproject
+        nx_slab = st.nx_slab
+        scale = st.scale
+        data_axis = st.data_axis
+        pod_axis = st.pod_axis
+        n_steps = self.n_steps
+        nb = g.n_proj // grid.n_ranks // n_steps
 
         if self.schedule == "fused":
             def rank_fn(pm_local: Array, proj_local: Array) -> Array:
@@ -501,6 +546,11 @@ class ReconstructionPlan:
         Results are cached per plan, so repeated builds (and the thin
         legacy wrappers that build per call) never re-trace.
         """
+        if self.schedule == "incremental":
+            raise ValueError(
+                "schedule='incremental' is stateful (projections arrive as "
+                "deltas); use plan.build_incremental() to obtain a "
+                "streaming session instead of build()")
         if source is not None or sink is not None:
             return self._build_with_io(source, sink)
         try:
@@ -536,12 +586,43 @@ class ReconstructionPlan:
             pass
         return reconstruct_fn
 
+    def build_incremental(self, source=None, sink=None) -> "IncrementalSession":
+        """Streaming reconstruction (the paper's *instant* CT): a stateful
+        session that folds projection deltas into the per-rank slab
+        accumulator as the scanner writes them, so time-from-last-projection
+        is one delta's fold plus the reduce epilogue — not the full pipeline.
+
+            plan = ReconstructionPlan(geometry=g, mesh=mesh,
+                                      schedule="incremental", n_steps=8)
+            sess = plan.build_incremental(source=src)
+            while not sess.is_complete:
+                sess.poll()          # discover + fold newly landed deltas
+            volume = sess.finalize() # reduce epilogue + FDK scale only
+
+        `n_steps` is the *nominal* delta count the planner prices; at run
+        time any contiguous, disjoint angle slices whose length divides
+        over the rank grid may be folded, in any order. See
+        `IncrementalSession` for the state machine and exactness contract.
+        """
+        if self.schedule != "incremental":
+            raise ValueError(
+                f"build_incremental() needs schedule='incremental', got "
+                f"{self.schedule!r} — batch schedules go through build()")
+        return IncrementalSession(self, source=source, sink=sink)
+
     def _build_with_io(self, source, sink) -> Callable:
         """The engine with its filesystem endpoints attached: scatter-read
         projections from `source` when none are passed, stream the sharded
         output volume to `sink` shard-per-file. The core engine underneath
         comes from the per-plan cache, so attaching I/O never re-traces."""
         engine = self.build()
+        # chunked+scatter emits the engine's internal 4-D y-chunk-major
+        # layout (see _output_spec); record it in the sink's manifest so
+        # VolumeSink.read() restores the canonical volume instead of
+        # silently returning chunked axes.
+        layout = None
+        if self.schedule == "chunked" and self.reduce in SCATTER_REDUCES:
+            layout = {"kind": "y_chunk_major", "y_chunks": self.y_chunks}
 
         def reconstruct_io(projections: Optional[Array] = None) -> Array:
             if projections is None:
@@ -553,10 +634,521 @@ class ReconstructionPlan:
             volume = engine(projections)
             if sink is not None:
                 jax.block_until_ready(volume)
-                sink.write(volume)
+                sink.write(volume, layout=layout)
             return volume
 
         return reconstruct_io
+
+
+def _lead_axes(axes: Tuple[str, ...]):
+    """PartitionSpec entry for a leading state dim sharded over `axes`."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+class StagedDelta(NamedTuple):
+    """One angle subset after the ARRIVAL-side stages — filtered, encoded
+    and column-AllGathered, awaiting only its fold. Produced by
+    `IncrementalSession.stage`, consumed by `IncrementalSession.update`."""
+
+    lo: int
+    hi: int
+    pm_col: Array        # shifted-ready projection matrices, gathered
+    q_col: Array         # filtered + encoded column batch (wire format)
+    sc_col: Optional[Array]   # per-projection scale sidecar (scaled codecs)
+
+
+class IncrementalSession:
+    """Stateful streaming reconstruction — `plan.build_incremental()`.
+
+    State machine (DESIGN.md, incremental schedule)::
+
+        OPEN --update(delta, angles)--> OPEN    fold one angle subset
+        OPEN --poll()-----------------> OPEN    discover + fold source deltas
+        OPEN --finalize(partial=True)-> OPEN    peek: reduce a COPY of state
+        OPEN --finalize()-------------> OPEN    full volume (all angles seen)
+
+    `finalize` is pure — the resident accumulator is never consumed, so the
+    session can keep folding after a peek. Each `update` filters, encodes
+    and column-AllGathers ONE contiguous angle slice and folds it into the
+    per-rank slab accumulator; `finalize` runs only the row-reduce epilogue
+    and the FDK scale.
+
+    Resident state (per rank): the f32 slab accumulator — full-width
+    (nx_slab, N_y, N_z) under reduce="psum" (row-reduce deferred to
+    finalize), or already scattered (nx_slab, N_y/C_data, N_z) under the
+    scatter reduces (each update psum_scatters its partial, so state stays
+    bounded exactly like the chunked schedule's output streaming). For
+    "scatter_bf16" an f32 error-feedback carry of the full-width slab rides
+    along: the quantization residual each update drops is re-injected into
+    the next update's partial — the chunked schedule's carry, turned along
+    the time axis — so only the final update's rounding survives per rank.
+
+    Exactness contract (tests/test_streaming.py): with
+    impl="reference"/"factorized" the fold threads the accumulator INTO the
+    back-projection scan (`init=`), continuing the per-voxel addition
+    sequence — so folding deltas in order is bit-identical to the fused
+    batch engine on the same device count, and folding any permutation is
+    bit-identical to the fused engine fed that same permuted projection
+    stream (f32 addition does not commute, so no schedule can make every
+    order bit-equal to the canonical one; permutations agree with it to
+    f32 reassociation tolerance). impl="kernel" folds `acc + bp(delta)`
+    (the Pallas kernel owns its accumulator) and matches to the same
+    reassociation tolerance.
+    """
+
+    def __init__(self, plan: ReconstructionPlan, source=None, sink=None):
+        plan.validate()
+        self.plan = plan
+        self._source = source
+        self._sink = sink
+        self._stages = plan._make_stages()
+        self._scatter = plan.reduce in SCATTER_REDUCES
+        self._compensated = plan.reduce == "scatter_bf16"
+        g = plan.geometry
+        self._covered = np.zeros(g.n_proj, dtype=bool)
+        self._pmats = np.asarray(projection_matrices(g))
+        self._update_fns: dict = {}
+        self._stage_fns: dict = {}
+        self._fold_fns: dict = {}
+        self._finalize_fn = None
+        self._init_state()
+
+    # -- state --------------------------------------------------------------
+
+    def _init_state(self) -> None:
+        g = self.plan.geometry
+        mesh = self.plan.mesh
+        st = self._stages
+        if mesh is None:
+            self._acc_spec = self._carry_spec = None
+            self._acc = jnp.zeros((g.n_x, g.n_y, g.n_z), jnp.float32)
+            self._carry = None
+            return
+        # Global state arrays carry a leading rank-row dim so each rank-row
+        # keeps its own partial under shard_map (block (1, nx_slab, ...)).
+        dp = st.dp
+        if self._scatter:
+            lead = (st.pod_axis,) if st.pod_axis is not None else ()
+            self._acc_spec = P(_lead_axes(lead), AXIS_MODEL, AXIS_DATA, None)
+            acc_shape = (axis_size(mesh, AXIS_POD), g.n_x, g.n_y, g.n_z)
+        else:
+            self._acc_spec = P(_lead_axes(dp), AXIS_MODEL, None, None)
+            acc_shape = (axis_size(mesh, AXIS_POD, AXIS_DATA),
+                         g.n_x, g.n_y, g.n_z)
+        self._acc = jax.device_put(
+            jnp.zeros(acc_shape, jnp.float32),
+            NamedSharding(mesh, self._acc_spec))
+        if self._compensated:
+            self._carry_spec = P(_lead_axes(dp), AXIS_MODEL, None, None)
+            self._carry = jax.device_put(
+                jnp.zeros((axis_size(mesh, AXIS_POD, AXIS_DATA),
+                           g.n_x, g.n_y, g.n_z), jnp.float32),
+                NamedSharding(mesh, self._carry_spec))
+        else:
+            self._carry_spec = None
+            self._carry = None
+
+    # -- bookkeeping --------------------------------------------------------
+
+    @property
+    def n_folded(self) -> int:
+        """Angles folded so far."""
+        return int(self._covered.sum())
+
+    @property
+    def is_complete(self) -> bool:
+        return bool(self._covered.all())
+
+    def pending_ranges(self) -> list:
+        """Contiguous [lo, hi) angle ranges not folded yet."""
+        missing = ~self._covered
+        (idx,) = np.nonzero(np.diff(missing.astype(np.int8), prepend=0,
+                                    append=0))
+        return [(int(idx[i]), int(idx[i + 1]))
+                for i in range(0, len(idx), 2)]
+
+    def _check_slice(self, angle_slice) -> Tuple[int, int]:
+        if isinstance(angle_slice, slice):
+            if angle_slice.step not in (None, 1):
+                raise ValueError("angle_slice must be contiguous (step 1)")
+            lo, hi = angle_slice.start or 0, angle_slice.stop
+        else:
+            lo, hi = angle_slice
+        n_proj = self.plan.geometry.n_proj
+        if hi is None:
+            hi = n_proj
+        lo, hi = int(lo), int(hi)
+        if not (0 <= lo < hi <= n_proj):
+            raise ValueError(
+                f"angle_slice [{lo}, {hi}) out of range for N_p={n_proj}")
+        if self._covered[lo:hi].any():
+            raise ValueError(
+                f"angle_slice [{lo}, {hi}) overlaps angles already folded "
+                "into this session — double-folding corrupts the volume")
+        n_ranks = self.plan.grid.n_ranks
+        if (hi - lo) % n_ranks:
+            raise ValueError(
+                f"delta of {hi - lo} angles must divide over the "
+                f"{n_ranks} ranks of the grid")
+        return lo, hi
+
+    # -- the fold (one delta) -----------------------------------------------
+
+    def _fold_closures(self, with_volume: bool):
+        """(fold, rank_fold): the per-delta fold shared by the raw-delta
+        update path and the staged fold path.
+
+        fold(acc_slab, pm_col, q_col, sc_col)       one rank's slab fold
+        rank_fold(acc, carry, pm_col, q_col, sc_col)
+            -> (new_acc, new_carry, volume|None)    leading-dim state block,
+                                                    scatter reduce + carry,
+                                                    fused epilogue when
+                                                    with_volume
+        """
+        plan, st, g = self.plan, self._stages, self.plan.geometry
+        slab_pmats = st.slab_pmats
+        backproject = st.backproject
+        nx_slab = st.nx_slab
+        data_axis = st.data_axis
+        scale = st.scale
+        pod_axis = st.pod_axis
+        dp = st.dp
+        scatter, compensated = self._scatter, self._compensated
+        # reference/factorized thread the accumulator INTO the scan (`init=`)
+        # for the bit-exact fold; the Pallas kernel owns its accumulator, so
+        # it falls back to `acc + bp(delta)`.
+        threads_init = plan.impl in ("reference", "factorized")
+
+        def fold(acc_slab, pm_col, q_col, sc_col):
+            pm_s = slab_pmats(pm_col)
+            if threads_init:
+                return backproject(pm_s, q_col, nx_slab, g.n_y, g.n_z,
+                                   scales=sc_col, init=acc_slab)
+            return acc_slab + backproject(pm_s, q_col, nx_slab, g.n_y,
+                                          g.n_z, scales=sc_col)
+
+        def fin_slab(acc_new):
+            """Per-rank finalize of the NEW accumulator block (epilogue of
+            the fused last-delta dispatch) — mirrors _get_finalize_fn."""
+            slab = acc_new[0]
+            if scatter:
+                if pod_axis is not None:  # cross-pod finish stays f32
+                    slab = lax.psum(slab, pod_axis)
+            else:
+                for a in dp:
+                    slab = lax.psum(slab, a)
+            return slab * scale
+
+        def rank_fold(acc, carry, pm_col, q_col, sc_col):
+            if not scatter:
+                new = fold(acc[0], pm_col, q_col, sc_col)[None]
+                new_carry = carry
+            else:
+                part = backproject(slab_pmats(pm_col), q_col,
+                                   nx_slab, g.n_y, g.n_z, scales=sc_col)
+                if compensated:
+                    # error feedback along the time axis: re-inject the
+                    # residual this rank dropped quantizing the PREVIOUS
+                    # delta before quantizing this one (cf. the chunked
+                    # schedule's per-chunk carry).
+                    part = part + carry[0]
+                    half = part.astype(jnp.bfloat16)
+                    new_carry = (part - half.astype(jnp.float32))[None]
+                    red = lax.psum_scatter(
+                        half, data_axis, scatter_dimension=1,
+                        tiled=True).astype(jnp.float32)
+                else:
+                    new_carry = carry
+                    red = lax.psum_scatter(part, data_axis,
+                                           scatter_dimension=1, tiled=True)
+                new = acc + red[None]
+            return new, new_carry, fin_slab(new) if with_volume else None
+
+        return fold, rank_fold
+
+    def _state_specs(self, with_volume: bool):
+        """(in-state specs, out_specs, pack) for a shard_mapped fold: the
+        accumulator (plus carry when compensated, plus the volume when the
+        epilogue is fused in) — shared wiring of update and staged-fold."""
+        carry_spec = self._carry_spec if self._compensated else None
+        state_in = ((self._acc_spec, carry_spec) if self._compensated
+                    else (self._acc_spec,))
+        outs = [self._acc_spec]
+        if self._compensated:
+            outs.append(carry_spec)
+        if with_volume:
+            outs.append(output_spec(self.plan.mesh, self.plan.reduce))
+
+        def pack(new, new_carry, vol):
+            out = (new,)
+            if self._compensated:
+                out += (new_carry,)
+            if with_volume:
+                out += (vol,)
+            return out[0] if len(out) == 1 else out
+
+        return state_in, (outs[0] if len(outs) == 1 else tuple(outs)), pack
+
+    def _get_update_fn(self, n_d: int, with_volume: bool = False) -> Callable:
+        """Jitted fold of one n_d-angle RAW delta: filter + encode + column
+        AllGather + fold. with_volume=True additionally runs the reduce
+        epilogue + FDK scale INSIDE the same dispatch and returns the
+        finished volume alongside the new state — the time-from-last-delta
+        path (one launch, XLA fuses the scale into the fold's epilogue
+        instead of paying a second dispatch)."""
+        fn = self._update_fns.get((n_d, with_volume))
+        if fn is not None:
+            return fn
+        mesh = self.plan.mesh
+        st = self._stages
+        gather_batch = st.gather_batch
+        scale = st.scale
+        fold, rank_fold = self._fold_closures(with_volume)
+
+        if mesh is None:
+            def update_fn(acc, pm_d, raw_d):
+                new = fold(acc, *gather_batch(pm_d, raw_d))
+                return (new, new * scale) if with_volume else new
+
+            update_fn = jax.jit(update_fn)
+        else:
+            pspec = _proj_spec(mesh)
+            state_in, out_specs, pack = self._state_specs(with_volume)
+            if self._compensated:
+                def rank(acc, carry, pm_d, raw_d):
+                    return pack(*rank_fold(acc, carry,
+                                           *gather_batch(pm_d, raw_d)))
+            else:
+                def rank(acc, pm_d, raw_d):  # carry unused: pass acc
+                    return pack(*rank_fold(acc, acc,
+                                           *gather_batch(pm_d, raw_d)))
+
+            update_fn = jax.jit(shard_map(
+                rank, mesh=mesh, in_specs=state_in + (pspec, pspec),
+                out_specs=out_specs, check_vma=False))
+
+        self._update_fns[(n_d, with_volume)] = update_fn
+        return update_fn
+
+    # -- staged folding (arrival-side work split off the fold) ---------------
+
+    def _gathered_spec(self):
+        """Spec of a staged column batch: the model-axis AllGather leaves
+        projections sharded over the remaining (pod, data) axes and
+        replicated over model."""
+        return P(_lead_axes(self._stages.dp))
+
+    def _get_stage_fn(self, n_d: int) -> Callable:
+        fn = self._stage_fns.get(n_d)
+        if fn is not None:
+            return fn
+        mesh = self.plan.mesh
+        gather_batch = self._stages.gather_batch
+        if mesh is None:
+            fn = jax.jit(gather_batch)
+        else:
+            pspec = _proj_spec(mesh)
+            gspec = self._gathered_spec()
+            fn = jax.jit(shard_map(
+                gather_batch, mesh=mesh, in_specs=(pspec, pspec),
+                out_specs=(gspec, gspec, gspec), check_vma=False))
+        self._stage_fns[n_d] = fn
+        return fn
+
+    def _get_fold_fn(self, n_d: int, with_volume: bool = False) -> Callable:
+        """Jitted fold of a STAGED delta (post-filter, post-gather columns):
+        only the back-projection + reduce (+ fused epilogue) — the work that
+        cannot overlap acquisition."""
+        fn = self._fold_fns.get((n_d, with_volume))
+        if fn is not None:
+            return fn
+        mesh = self.plan.mesh
+        scale = self._stages.scale
+        fold, rank_fold = self._fold_closures(with_volume)
+
+        if mesh is None:
+            def fold_fn(acc, pm_col, q_col, sc_col):
+                new = fold(acc, pm_col, q_col, sc_col)
+                return (new, new * scale) if with_volume else new
+
+            fold_fn = jax.jit(fold_fn)
+        else:
+            gspec = self._gathered_spec()
+            state_in, out_specs, pack = self._state_specs(with_volume)
+            if self._compensated:
+                def rank(acc, carry, pm_col, q_col, sc_col):
+                    return pack(*rank_fold(acc, carry, pm_col, q_col,
+                                           sc_col))
+            else:
+                def rank(acc, pm_col, q_col, sc_col):
+                    return pack(*rank_fold(acc, acc, pm_col, q_col, sc_col))
+
+            fold_fn = jax.jit(shard_map(
+                rank, mesh=mesh,
+                in_specs=state_in + (gspec, gspec, gspec),
+                out_specs=out_specs, check_vma=False))
+
+        self._fold_fns[(n_d, with_volume)] = fold_fn
+        return fold_fn
+
+    def stage(self, projection_delta: Array, angle_slice) -> "StagedDelta":
+        """Run the ARRIVAL-side half of an update — filter + encode + column
+        AllGather — without folding. Pure (no session state changes).
+
+        Filtering is per-projection independent, so a streaming rank stages
+        frames while the burst is still landing: by the time the burst's
+        last frame commits, only the fold (back-projection + reduce) is
+        left — `update(staged, finalize=True)` is then the entire
+        time-from-last-projection tail (the instant-CT figure of merit,
+        benchmarks/bench_streaming.py)."""
+        lo, hi = self._check_slice(angle_slice)
+        self._check_delta_shape(projection_delta, lo, hi)
+        pm_d, raw_d = self._place_delta(projection_delta, lo, hi)
+        pm_col, q_col, sc_col = self._get_stage_fn(hi - lo)(pm_d, raw_d)
+        return StagedDelta(lo, hi, pm_col, q_col, sc_col)
+
+    def _check_delta_shape(self, delta, lo: int, hi: int) -> None:
+        g = self.plan.geometry
+        if tuple(delta.shape) != (hi - lo, g.n_v, g.n_u):
+            raise ValueError(
+                f"projection_delta shape {tuple(delta.shape)} does not "
+                f"match angles [{lo}, {hi}) x detector ({g.n_v}, {g.n_u})")
+
+    def _place_delta(self, delta, lo: int, hi: int):
+        """(pm_d, raw_d) for the angle range, device-placed for the mesh."""
+        mesh = self.plan.mesh
+        pm_d = jnp.asarray(self._pmats[lo:hi])
+        raw_d = delta
+        if mesh is not None:
+            sharding = input_sharding(mesh)
+            pm_d = jax.device_put(pm_d, sharding)
+            raw_d = jax.device_put(raw_d, sharding)
+        return pm_d, raw_d
+
+    def update(self, projection_delta, angle_slice=None,
+               finalize: bool = False):
+        """Fold one contiguous angle subset: filter + encode + column
+        AllGather + slab back-projection (+ per-delta scatter reduce).
+
+        projection_delta : (n_d, N_v, N_u) raw projections for the global
+                           angle range `angle_slice` = slice/(lo, hi),
+                           n_d dividing over the rank grid — or a
+                           `StagedDelta` from `stage()` (no angle_slice;
+                           only the fold runs).
+        finalize         : True fuses the reduce epilogue + FDK scale into
+                           the SAME dispatch and returns the volume (the
+                           time-from-last-delta path — one launch instead
+                           of update-then-finalize). State is still folded,
+                           and a full-coverage finalize streams to the
+                           session's VolumeSink exactly like finalize().
+
+        Returns the session (chaining) — or the volume when finalize=True.
+        """
+        if isinstance(projection_delta, StagedDelta):
+            if angle_slice is not None:
+                raise TypeError(
+                    "a StagedDelta carries its own angle range; do not "
+                    "pass angle_slice")
+            s = projection_delta
+            lo, hi = self._check_slice((s.lo, s.hi))
+            fn = self._get_fold_fn(hi - lo, with_volume=finalize)
+            args = (s.pm_col, s.q_col, s.sc_col)
+        else:
+            if angle_slice is None:
+                raise TypeError("angle_slice is required for a raw delta")
+            lo, hi = self._check_slice(angle_slice)
+            self._check_delta_shape(projection_delta, lo, hi)
+            fn = self._get_update_fn(hi - lo, with_volume=finalize)
+            args = self._place_delta(projection_delta, lo, hi)
+        volume = None
+        if self._compensated:
+            if finalize:
+                self._acc, self._carry, volume = fn(
+                    self._acc, self._carry, *args)
+            else:
+                self._acc, self._carry = fn(self._acc, self._carry, *args)
+        elif finalize:
+            self._acc, volume = fn(self._acc, *args)
+        else:
+            self._acc = fn(self._acc, *args)
+        self._covered[lo:hi] = True
+        if not finalize:
+            return self
+        if self._sink is not None and self.is_complete:
+            jax.block_until_ready(volume)
+            self._sink.write(volume)
+        return volume
+
+    # -- source coupling ----------------------------------------------------
+
+    def poll(self) -> int:
+        """Discover newly landed deltas on the ProjectionSource and fold
+        them. Returns the number of deltas folded (0 = nothing new)."""
+        if self._source is None:
+            raise TypeError(
+                "session was built without a ProjectionSource; feed deltas "
+                "via update(delta, angle_slice) instead")
+        n = 0
+        for lo, hi, delta in self._source.iter_deltas(self.plan.mesh):
+            self.update(delta, (lo, hi))
+            n += 1
+        return n
+
+    # -- epilogue -----------------------------------------------------------
+
+    def _get_finalize_fn(self) -> Callable:
+        if self._finalize_fn is not None:
+            return self._finalize_fn
+        plan, st = self.plan, self._stages
+        mesh = plan.mesh
+        scale = st.scale
+        if mesh is None:
+            self._finalize_fn = jax.jit(lambda acc: acc * scale)
+            return self._finalize_fn
+        if self._scatter:
+            pod_axis = st.pod_axis
+
+            def rank(acc):
+                slab = acc[0]
+                if pod_axis is not None:  # cross-pod finish stays f32
+                    slab = lax.psum(slab, pod_axis)
+                return slab * scale
+        else:
+            dp = st.dp
+
+            def rank(acc):
+                slab = acc[0]
+                for a in dp:
+                    slab = lax.psum(slab, a)
+                return slab * scale
+
+        self._finalize_fn = jax.jit(shard_map(
+            rank, mesh=mesh, in_specs=(self._acc_spec,),
+            out_specs=output_spec(mesh, plan.reduce), check_vma=False))
+        return self._finalize_fn
+
+    def finalize(self, partial: bool = False) -> Array:
+        """Row-reduce epilogue + FDK scale — the ONLY work left after the
+        last delta folds. Pure: the session keeps accepting updates.
+
+        partial=True returns the reconstruction from the angles folded so
+        far (a mid-scan peek; limited-angle artifacts are the caller's to
+        interpret). The default demands full coverage. A full finalize
+        streams the volume to the session's VolumeSink, if one was given.
+        """
+        if not partial and not self.is_complete:
+            raise ValueError(
+                f"only {self.n_folded}/{self.plan.geometry.n_proj} angles "
+                f"folded; missing ranges {self.pending_ranges()} — fold "
+                "them (update/poll) or pass partial=True for a mid-scan "
+                "peek")
+        volume = self._get_finalize_fn()(self._acc)
+        if self._sink is not None and not partial:
+            jax.block_until_ready(volume)
+            self._sink.write(volume)
+        return volume
 
 
 _SPEC_INT_KEYS = ("n_steps", "y_chunks", "vmem_budget")

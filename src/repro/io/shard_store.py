@@ -286,6 +286,72 @@ def save_array(path: str, arr, *, chunks: Optional[Sequence[int]] = None,
 
 
 # ---------------------------------------------------------------------------
+# streaming append (growing store: the scanner writes while readers poll)
+
+def _write_manifest(path: str, manifest: dict) -> None:
+    """Atomic manifest replace: readers polling a growing store either see
+    the old manifest or the new one, never a torn write."""
+    mpath = os.path.join(path, MANIFEST)
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, mpath)
+
+
+def init_store(path: str, shape: Sequence[int], dtype,
+               extra_manifest: Optional[dict] = None) -> str:
+    """Create an EMPTY shard store of a known final shape — the head of a
+    streaming write (`append_region`): the manifest declares the full array
+    up front with no shards, and grows one entry per committed append.
+    Readers (`read_region` / a poller diffing `manifest["shards"]`) see only
+    committed data."""
+    os.makedirs(os.path.join(path, SHARD_DIR), exist_ok=True)
+    manifest = dict(extra_manifest or {})
+    manifest.update({
+        "shape": list(shape),
+        "dtype": str(np.dtype(dtype)),
+        "spec": None,
+        "shards": [],
+    })
+    _write_manifest(path, manifest)
+    return path
+
+
+def append_region(path: str, index: Sequence, data) -> dict:
+    """Append one region to a growing store and COMMIT it.
+
+    Write protocol (PFS-safe ordering): the shard file lands fully on disk
+    first, then the manifest is atomically replaced with the new entry
+    appended — the manifest entry is the commit point, so a reader never
+    sees an entry whose bytes are not durable, and a crashed writer leaves
+    at worst an orphaned (inert) shard file. Returns the new entry."""
+    m = read_manifest(path)
+    shape = tuple(m["shape"])
+    idx = (tuple(tuple(b) for b in index) if not isinstance(index[0], slice)
+           else _normalize_index(index, shape))
+    dtype = dtype_from_name(m["dtype"])
+    piece = np.ascontiguousarray(np.asarray(data, dtype=dtype))
+    if piece.shape != _extent(idx):
+        raise ValueError(
+            f"append data shape {piece.shape} does not span index {idx}")
+    for entry in m["shards"]:
+        prev = tuple(tuple(b) for b in entry["index"])
+        if _intersect(idx, prev) is not None:
+            raise StoreError(
+                f"append region {idx} overlaps committed shard "
+                f"{entry['file']} ({prev}) in {path!r}")
+    fname = f"shard_{len(m['shards']):05d}.bin"
+    with open(os.path.join(path, SHARD_DIR, fname), "wb") as f:
+        f.write(piece.tobytes())
+        f.flush()
+        os.fsync(f.fileno())
+    entry = {"file": fname, "index": [list(b) for b in idx]}
+    m["shards"].append(entry)
+    _write_manifest(path, m)
+    return entry
+
+
+# ---------------------------------------------------------------------------
 # read side
 
 def read_manifest(path: str) -> dict:

@@ -31,7 +31,8 @@ Both are wired as optional `source=` / `sink=` stages on
 from __future__ import annotations
 
 import os
-from typing import Optional, Sequence
+from functools import lru_cache
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +47,22 @@ from . import shard_store
 SCALES_DIR = "scales"
 
 
+@lru_cache(maxsize=None)
+def _jit_decode(codec_name: str):
+    """One jitted decode per codec, cached for the process: `load()` used to
+    wrap `codec.decode` in a fresh `jax.jit` per call, retracing on every
+    load. jit's own signature cache handles distinct input shapes (deltas of
+    different sizes) under the one cached callable."""
+    return jax.jit(Precision(codec_name).codec.decode)
+
+
 class ProjectionSource:
     """Projections stored shard-per-file (raw f32, or a stream codec's wire
     format + scale sidecar), restorable onto any mesh."""
 
     def __init__(self, path: str):
         self.path = path
+        self._consumed: set = set()   # shard files already folded (poll API)
 
     @classmethod
     def write(cls, path: str, projections,
@@ -119,23 +130,162 @@ class ProjectionSource:
             if codec_name is None:
                 return jax.device_put(shard_store.load_array(self.path))
             data, scales = self.load_encoded()
-            return jax.device_put(
-                np.asarray(Precision(codec_name).codec.decode(
-                    jnp.asarray(data),
-                    None if scales is None else jnp.asarray(scales))))
-        from repro.core.distributed import input_sharding
+            return _jit_decode(codec_name)(
+                jnp.asarray(data),
+                None if scales is None else jnp.asarray(scales))
+        from jax.sharding import NamedSharding
+        from repro.core.distributed import _proj_spec, input_sharding
 
         sharding = input_sharding(mesh)
         data = shard_store.load_array(self.path, sharding)
         if codec_name is None:
             return data
-        codec = Precision(codec_name).codec
         scales = None
         spath = os.path.join(self.path, SCALES_DIR)
         if os.path.exists(os.path.join(spath, shard_store.MANIFEST)):
-            scales = shard_store.load_array(spath)
-        return jax.jit(codec.decode)(
-            data, None if scales is None else jnp.asarray(scales))
+            # The sidecar is sharded along the projection axis exactly like
+            # the data (one scale per projection): each rank scatter-reads
+            # only its own slice, not the whole sidecar.
+            scales = shard_store.load_array(
+                spath, NamedSharding(mesh, _proj_spec(mesh)))
+        return _jit_decode(codec_name)(data, scales)
+
+    # -- streaming discovery (the instant-CT source side) -------------------
+
+    def poll(self) -> list:
+        """Diff the store's (growing) manifest against what this source has
+        already handed out: the contiguous [lo, hi) angle ranges of newly
+        COMMITTED shards, sorted by lo. Read-only — ranges are marked
+        consumed by `iter_deltas`, so repeated polls keep reporting a range
+        until it is actually loaded. A store whose manifest does not exist
+        yet (scanner not started) reports no deltas."""
+        try:
+            m = shard_store.read_manifest(self.path)
+        except shard_store.StoreError:
+            return []
+        dtype = shard_store.dtype_from_name(m["dtype"])
+        ready = []
+        for entry in m["shards"]:
+            if entry["file"] in self._consumed:
+                continue
+            idx = tuple(tuple(b) for b in entry["index"])
+            fpath = os.path.join(self.path, shard_store.SHARD_DIR,
+                                 entry["file"])
+            # The manifest entry is the writer's commit point
+            # (shard_store.append_region); the size check just refuses to
+            # hand out a range whose bytes a non-protocol writer truncated.
+            expected = dtype.itemsize
+            for lo, hi in idx:
+                expected *= hi - lo
+            if (not os.path.exists(fpath)
+                    or os.path.getsize(fpath) != expected):
+                continue
+            ready.append((idx[0][0], idx[0][1], entry["file"]))
+        ready.sort()
+        return [(lo, hi) for lo, hi, _ in ready]
+
+    def load_slice(self, lo: int, hi: int, mesh=None) -> jax.Array:
+        """Load + decode the angle range [lo, hi) only: the region read
+        opens just the shard files (and sidecar shards) intersecting it.
+        With a mesh the delta lands sharded with `input_sharding(mesh)` —
+        ready for `IncrementalSession.update`."""
+        shape = self.shape
+        region = ((lo, hi),) + tuple((0, d) for d in shape[1:])
+        data = shard_store.read_region(self.path, region)
+        codec_name = self.codec_name
+        scales = None
+        if codec_name is not None:
+            spath = os.path.join(self.path, SCALES_DIR)
+            if os.path.exists(os.path.join(spath, shard_store.MANIFEST)):
+                scales = jnp.asarray(
+                    shard_store.read_region(spath, ((lo, hi),)))
+        if mesh is not None:
+            from repro.core.distributed import input_sharding
+            data = jax.device_put(data, input_sharding(mesh))
+        else:
+            data = jnp.asarray(data)
+        if codec_name is None:
+            return data
+        return _jit_decode(codec_name)(data, scales)
+
+    def iter_deltas(self, mesh=None
+                    ) -> Iterator[Tuple[int, int, jax.Array]]:
+        """Consume newly committed deltas: yields (lo, hi, projections) for
+        each range `poll()` discovers, decoded and (on a mesh) sharded, and
+        marks it consumed — the discovery protocol IncrementalSession.poll
+        drives. Yields nothing when the scanner has not committed anything
+        new."""
+        try:
+            m = shard_store.read_manifest(self.path)
+        except shard_store.StoreError:
+            return
+        by_range = {
+            (tuple(e["index"][0][:2])): e["file"] for e in m["shards"]}
+        for lo, hi in self.poll():
+            yield lo, hi, self.load_slice(lo, hi, mesh)
+            self._consumed.add(by_range[(lo, hi)])
+
+
+class StreamingProjectionWriter:
+    """The scanner side of the streaming protocol: append projection deltas
+    to a growing store that `ProjectionSource.poll()` discovers.
+
+    Commit ordering (PFS-safe, see shard_store.append_region): for scaled
+    codecs the scale sidecar lands and commits FIRST, then the data shard —
+    whose manifest entry is the overall commit point. A reader that sees a
+    committed data range is therefore guaranteed its scales are readable;
+    a crash between the two leaves only an orphaned sidecar entry, which no
+    reader ever addresses.
+
+        writer = StreamingProjectionWriter(path, (N_p, N_v, N_u),
+                                           codec="fp8_e4m3")
+        writer.append(frames, lo)            # one scanner burst
+        ...
+        src = ProjectionSource(path)         # reader, possibly another host
+        for lo, hi, delta in src.iter_deltas(mesh): session.update(...)
+    """
+
+    def __init__(self, path: str, shape: Sequence[int],
+                 codec: "Precision | str | None" = None):
+        if len(shape) != 3:
+            raise ValueError(f"projection stream shape must be "
+                             f"(N_p, N_v, N_u), got {tuple(shape)}")
+        self.path = path
+        self.shape = tuple(shape)
+        self._prec = None if codec is None else resolve_precision(codec)
+        extra = ({"codec": self._prec.storage}
+                 if self._prec is not None else None)
+        dtype = (np.float32 if self._prec is None
+                 else self._prec.storage_dtype)
+        shard_store.init_store(path, self.shape, dtype, extra_manifest=extra)
+        if self._prec is not None and self._prec.codec.has_scales:
+            shard_store.init_store(os.path.join(path, SCALES_DIR),
+                                   self.shape[:1], np.float32)
+
+    def append(self, projections, lo: int) -> Tuple[int, int]:
+        """Commit the contiguous angle range [lo, lo + n) (encoding it
+        first when the store carries a codec). Returns (lo, hi)."""
+        projections = np.asarray(projections)
+        n, n_v, n_u = projections.shape
+        hi = lo + n
+        if (n_v, n_u) != self.shape[1:] or hi > self.shape[0]:
+            raise ValueError(
+                f"delta [{lo}, {hi}) x ({n_v}, {n_u}) does not fit the "
+                f"declared stream shape {self.shape}")
+        region = ((lo, hi), (0, n_v), (0, n_u))
+        if self._prec is None:
+            shard_store.append_region(self.path, region, projections)
+            return lo, hi
+        data, scales = self._prec.codec.encode(jnp.asarray(projections))
+        if scales is not None:   # sidecar first — see commit ordering above
+            shard_store.append_region(os.path.join(self.path, SCALES_DIR),
+                                      ((lo, hi),), np.asarray(scales))
+        shard_store.append_region(self.path, region, np.asarray(data))
+        return lo, hi
+
+
+# Manifest key recording a non-canonical stored volume layout (VolumeSink).
+LAYOUT_KEY = "layout"
 
 
 class VolumeSink:
@@ -145,14 +295,42 @@ class VolumeSink:
     def __init__(self, path: str):
         self.path = path
 
-    def write(self, volume) -> str:
-        """Write the (sharded) volume; returns the store directory."""
-        return shard_store.save_array(self.path, volume)
+    def write(self, volume, layout: Optional[dict] = None) -> str:
+        """Write the (sharded) volume; returns the store directory.
+
+        `layout` records a NON-canonical engine layout in the manifest so
+        `read()` can restore the canonical (N_x, N_y, N_z) volume — the
+        chunked+scatter engine streams its internal 4-D
+        (N_x, y_chunks, N_y/y_chunks, N_z) accumulator layout, recorded as
+        ``{"kind": "y_chunk_major", "y_chunks": int}``. Without the record
+        a reader had no way to tell the store was not a plain volume."""
+        extra = None if layout is None else {LAYOUT_KEY: layout}
+        return shard_store.save_array(self.path, volume,
+                                      extra_manifest=extra)
+
+    def layout(self) -> Optional[dict]:
+        """The recorded engine layout, or None for a canonical store."""
+        return shard_store.read_manifest(self.path).get(LAYOUT_KEY)
 
     def read(self, sharding=None):
         """Read the stored volume back (host numpy, or scatter-read onto
-        `sharding`)."""
-        return shard_store.load_array(self.path, sharding)
+        `sharding`), restoring the canonical (N_x, N_y, N_z) axis order
+        when the manifest records a non-canonical engine layout. Device
+        reads (`sharding=`) address the stored layout directly — resharding
+        canonicalized data is the caller's concern."""
+        arr = shard_store.load_array(self.path, sharding)
+        layout = self.layout()
+        if layout is None or sharding is not None:
+            return arr
+        kind = layout.get("kind")
+        if kind != "y_chunk_major":
+            raise shard_store.StoreError(
+                f"volume store {self.path!r} records unknown layout "
+                f"{kind!r}; cannot canonicalize")
+        # (N_x, y_chunks, yc, N_z) -> (N_x, N_y, N_z): chunk-major y is
+        # contiguous, a reshape restores the volume.
+        n_x, y_chunks, yc, n_z = arr.shape
+        return np.ascontiguousarray(arr).reshape(n_x, y_chunks * yc, n_z)
 
     def nbytes(self) -> int:
         """Stored payload size (shard files only, not the manifest)."""

@@ -21,6 +21,17 @@ the terms per plan point:
                                the gathered projection batch once per y-chunk
                                (the Q^T tile is re-read for every output
                                chunk), an HBM-traffic term on T_bp.
+                  incremental — the streaming session (build_incremental):
+                               n_steps deltas arrive from OUTSIDE the
+                               pipeline, so there is no intra-pipeline
+                               overlap to model (overlap=False); the
+                               scatter reduces run once PER DELTA (the
+                               resident accumulator stays scattered),
+                               multiplying the reduce term by n_steps,
+                               while psum defers its one reduce to
+                               finalize(). What the mode buys is latency,
+                               not throughput — `time_from_last_delta`
+                               below prices it.
   reduce          psum (allreduce) moves ~2x the bytes of psum_scatter per
                   rank (2(C-1)/C vs (C-1)/C ring traffic) — the volume
                   Reduce term sees the mode — and scatter_bf16 halves the
@@ -168,6 +179,11 @@ def reduce_wire_bytes(g: CBCTGeometry, point: PlanPoint) -> int:
         return grid.n_ranks * per_rank
     wire = slab4 * REDUCE_WIRE_ITEMSIZE[point.reduce] // 4
     per_rank = wire * (d - 1) // d
+    if point.schedule == "incremental":
+        # the resident accumulator stays scattered: every delta
+        # psum_scatters its full-width partial slab — n_steps scatters
+        # instead of one (the price of bounded streaming state).
+        per_rank *= max(1, point.n_steps)
     if pods > 1:     # f32 cross-pod finish on the scattered slab
         per_rank += 2 * (slab4 // d) * (pods - 1) // pods
     return grid.n_ranks * per_rank
@@ -216,6 +232,10 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
         ring = (c - 1) / c
         t_reduce = base.t_reduce * ring * (2.0 if point.reduce == "psum"
                                            else 1.0)
+        if (point.schedule == "incremental"
+                and point.reduce in SCATTER_REDUCES):
+            # one full-width psum_scatter per delta (reduce_wire_bytes).
+            t_reduce *= max(1, point.n_steps)
 
     # T_write (Eq. 16) with the plan's writer count: the shard store's
     # slice-per-rank files mean the scatter epilogue brings R*C_data
@@ -228,11 +248,43 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
     # Overlap needs something to overlap WITH: a pipelined/chunked schedule
     # at n_steps=1 degenerates to one gather + one back-projection (the
     # engine's scan has zero steps), so Eq. 17's max only applies when the
-    # stream is actually micro-batched.
+    # stream is actually micro-batched. The incremental schedule never
+    # overlaps internally — its deltas arrive from outside the pipeline.
     return dataclasses.replace(
         base, t_bp=t_bp, t_reduce=t_reduce, t_store=t_store,
-        overlap=point.schedule != "fused" and point.n_steps > 1,
+        overlap=(point.schedule in ("pipelined", "chunked")
+                 and point.n_steps > 1),
     )
+
+
+def time_from_last_delta(g: CBCTGeometry, point: PlanPoint,
+                         system: MachineSpec = ABCI) -> float:
+    """Modeled seconds from the LAST projection landing to the finished
+    volume under an incremental plan — the streaming mode's figure of merit
+    (benchmarks/bench_streaming.py measures it). The arrival-side stages of
+    the final delta (filter + encode + AllGather — per-projection
+    independent, `IncrementalSession.stage`) overlap the tail of
+    acquisition, so the modeled tail is one delta's back-projection fold,
+    plus the finalize epilogue (the per-delta psum_scatter under the
+    scatter reduces; the single deferred reduce under psum) and the store.
+    The batch counterpart is the full plan's `t_runtime` — streaming wins
+    when this is ~1/n_steps of that."""
+    if point.schedule != "incremental":
+        raise ValueError(
+            f"time_from_last_delta prices schedule='incremental' points, "
+            f"got {point.schedule!r}")
+    bd = predict_point(g, point, system)
+    n = max(1, point.n_steps)
+    # one delta's fold: the per-delta slice of the BP stage (+ the one
+    # per-micro-batch overhead predict_point charged n times). The staged
+    # arrival work (t_flt, t_allgather, t_h2d) rode along with acquisition.
+    per_delta = ((bd.t_bp - bd.t_h2d - n * STEP_OVERHEAD_S) / n
+                 + STEP_OVERHEAD_S)
+    if point.reduce in SCATTER_REDUCES:
+        finalize = bd.t_reduce / n          # the last delta's scatter
+    else:
+        finalize = bd.t_reduce              # psum deferred to finalize()
+    return per_delta + finalize + bd.t_d2h + bd.t_store
 
 
 def predict_plan(plan, system: MachineSpec = ABCI) -> PerfBreakdown:

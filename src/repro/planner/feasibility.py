@@ -25,6 +25,13 @@ Footprint terms (per device, peak):
                            the schedule) plus 2 chunk-sized partials; the
                            compensated reduce (scatter_bf16) additionally
                            carries a full-slab f32 error-feedback buffer.
+                incremental the RESIDENT session state (core/plan.py
+                           IncrementalSession) — old + new accumulator
+                           live across the fold (no donation): 2x the
+                           full slab under psum, 2x the 1/data-scattered
+                           slab plus one full-width per-delta partial
+                           under the scatter reduces; scatter_bf16 adds
+                           the full-slab f32 error-feedback carry.
   temps       filter workspace: the per-step local batch at f32 plus its
               FFT pad (~2x).
 
@@ -70,7 +77,10 @@ def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
     proj_shard = np_local * pix * 4
 
     np_step_col = g.n_proj // (grid.c * point.n_steps)   # gathered per step
-    buffers = 1 if point.schedule == "fused" else 2
+    # fused gathers once; pipelined/chunked double-buffer (batch s gathers
+    # while s-1 back-projects); incremental holds one delta at a time (its
+    # deltas arrive from outside — nothing to overlap with).
+    buffers = 1 if point.schedule in ("fused", "incremental") else 2
     # Wire format: quantized data + scale sidecar (the same bytes the
     # engine's gather_batch holds after the AllGather).
     gathered = buffers * prec.wire_bytes(np_step_col, g.n_v, g.n_u)
@@ -81,6 +91,15 @@ def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
         slab = slab_f32
     elif point.schedule == "pipelined":
         slab = 2 * slab_f32
+    elif point.schedule == "incremental":
+        # Resident session state: the fold returns a NEW accumulator while
+        # the old one is still live (no donation), so 2x the resident acc;
+        # the scatter modes keep the acc 1/data-scattered but materialize
+        # one full-width partial per delta before its psum_scatter.
+        scatter_div = (point.data_size or grid.c) if scatter else 1
+        slab = 2 * slab_f32 // scatter_div
+        if scatter:
+            slab += slab_f32
     else:  # chunked
         y_chunks = point.y_chunks or 1
         # The engine's accumulator is scattered over the DATA axis only
@@ -90,10 +109,12 @@ def plan_footprint(g: CBCTGeometry, point: PlanPoint) -> MemoryFootprint:
         chunk = nx_slab * (g.n_y // y_chunks) * g.n_z * 4
         slab = slab_f32 // scatter_div + 2 * chunk
     if point.reduce == "scatter_bf16":
-        # The half-width reduce is not free in memory: chunked carries the
-        # full-slab f32 error-feedback buffer; fused/pipelined materialize
-        # a bf16 copy of the slab for the wire.
-        slab += slab_f32 if point.schedule == "chunked" else slab_f32 // 2
+        # The half-width reduce is not free in memory: chunked (and the
+        # incremental session, which turns the same carry along the time
+        # axis) holds the full-slab f32 error-feedback buffer;
+        # fused/pipelined materialize a bf16 copy of the slab for the wire.
+        slab += (slab_f32 if point.schedule in ("chunked", "incremental")
+                 else slab_f32 // 2)
 
     temps = 2 * (np_local // max(1, point.n_steps)) * pix * 4
     return MemoryFootprint(proj_shard, gathered, slab, temps)

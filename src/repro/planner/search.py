@@ -4,7 +4,14 @@ The search space is the cross-product the plan layer exposes:
 
   grid       R x C factorizations (core/distributed.grid_candidates) when
              searching over a device count; fixed by the mesh otherwise.
-  schedule   fused | pipelined | chunked (+ n_steps, y_chunks candidates)
+  schedule   fused | pipelined | chunked (+ n_steps, y_chunks candidates).
+             The streaming "incremental" schedule is priced and rankable
+             but only enumerated when PINNED (schedule="incremental"):
+             its plans build stateful sessions (`build_incremental()`),
+             not batch callables, so the default search must never hand
+             one to a caller expecting `plan.build()` — and its figure of
+             merit is latency (cost.time_from_last_delta), which the
+             throughput ranking below does not capture.
   reduce     psum | scatter | scatter_bf16 (half-width compensated scatter)
   precision  fp32 | bf16 | fp16 | fp8_e4m3 (quarter-width + scale sidecar)
   impl       factorized | kernel (| reference)
@@ -34,6 +41,8 @@ from .feasibility import DEFAULT_HBM_BYTES, MemoryFootprint, check_feasible, \
     plan_footprint
 
 _SCHEDULE_ORDER = ("fused", "pipelined", "chunked")
+# Ranking knows every schedule, including the pin-only streaming one.
+_RANK_SCHEDULE_ORDER = _SCHEDULE_ORDER + ("incremental",)
 _REDUCE_ORDER = ("psum", "scatter", "scatter_bf16")
 _PRECISION_ORDER = ("fp32", "bf16", "fp16", "fp8_e4m3")
 
@@ -72,7 +81,7 @@ def _rank_key(p: PlanProposal):
         p.predicted,
         -resolve_precision(pt.precision).storage_bytes,
         _PRECISION_ORDER.index(pt.precision),
-        _SCHEDULE_ORDER.index(pt.schedule),
+        _RANK_SCHEDULE_ORDER.index(pt.schedule),
         pt.n_steps,
         pt.y_chunks or 0,
         _REDUCE_ORDER.index(pt.reduce),
@@ -272,7 +281,9 @@ def auto_plan(g: CBCTGeometry, mesh=None, *,
             f"[{worst.spec()}]: {worst.reason}; raise the budget or loosen "
             "the pinned dimensions")
     proposals = feasible[:top_k]
-    if measure:
+    if measure and schedule != "incremental":
+        # incremental plans build sessions, not batch callables — there is
+        # no single engine call for refine() to time.
         from .measure import refine
         proposals = refine(g, proposals)
     return proposals[0].plan

@@ -1,0 +1,555 @@
+"""Streaming instant-CT tests: IncrementalSession equivalence against the
+batch engines (bit-for-bit for fp32 in-order folding, codec floors for the
+quantized streams), the stage/fold split, the delta discovery protocol
+(StreamingProjectionWriter -> ProjectionSource.poll/iter_deltas), the
+VolumeSink layout round-trip, and the planner's incremental pricing.
+
+The fast tier doubles as the CI smoke test (fast CI runs
+`pytest -m "not slow"`); the mesh cross-product runs in a slow subprocess
+with 8 virtual devices, like tests/test_plan.py."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.backprojection import backproject_reference
+from repro.core.distributed import choose_grid
+from repro.core.fdk import fdk_scale
+from repro.core.filtering import filter_projections
+from repro.core.geometry import default_geometry, projection_matrices
+from repro.core.phantom import forward_project
+from repro.core.plan import (
+    IncrementalSession, ReconstructionPlan, StagedDelta, plan_from_spec,
+)
+from repro.core.precision import Precision
+from repro.io import shard_store
+from repro.io.streams import (
+    ProjectionSource, StreamingProjectionWriter, VolumeSink,
+)
+from repro.planner.cost import (
+    point_from_plan, predict_point, time_from_last_delta,
+)
+from repro.planner.feasibility import plan_footprint
+
+
+@pytest.fixture(scope="module")
+def geo():
+    return default_geometry(16, n_proj=16)
+
+
+@pytest.fixture(scope="module")
+def proj(geo):
+    return np.asarray(forward_project(geo))
+
+
+@pytest.fixture(scope="module")
+def fused_oracle(geo, proj):
+    return np.asarray(ReconstructionPlan(geometry=geo).build()(proj))
+
+
+def _session(geo, n_steps=4, **kw):
+    plan = ReconstructionPlan(geometry=geo, schedule="incremental",
+                              n_steps=n_steps, **kw)
+    return plan.build_incremental()
+
+
+# ---------------------------------------------------------------------------
+# CI smoke + fp32 exactness contract
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalEquivalence:
+    def test_smoke_session_lifecycle(self, geo, proj, fused_oracle):
+        """The small incremental-session smoke test the fast CI tier runs:
+        fold all deltas, finalize, match the fused engine."""
+        sess = _session(geo, n_steps=2)
+        assert sess.n_folded == 0 and not sess.is_complete
+        sess.update(proj[:8], (0, 8))
+        assert sess.n_folded == 8
+        assert sess.pending_ranges() == [(8, 16)]
+        sess.update(proj[8:], (8, 16))
+        assert sess.is_complete
+        vol = np.asarray(sess.finalize())
+        np.testing.assert_array_equal(vol, fused_oracle)
+
+    @pytest.mark.parametrize("impl", ["reference", "factorized"])
+    def test_in_order_bit_exact(self, geo, proj, impl):
+        """In-order incremental folding continues the fused engine's
+        per-voxel addition sequence (`init=` threading): bit-for-bit."""
+        oracle = np.asarray(
+            ReconstructionPlan(geometry=geo, impl=impl).build()(proj))
+        sess = _session(geo, n_steps=4, impl=impl)
+        for k in range(4):
+            sess.update(proj[4 * k:4 * (k + 1)], (4 * k, 4 * (k + 1)))
+        np.testing.assert_array_equal(np.asarray(sess.finalize()), oracle)
+
+    def test_any_order_matches_permuted_fused_stream(self, geo, proj,
+                                                     fused_oracle):
+        """Folding deltas out of order is bit-identical to the fused fold
+        of that same permuted projection stream (f32 addition does not
+        commute, so no schedule can make every order bit-equal to the
+        canonical one — permutations agree with it only to reassociation
+        tolerance)."""
+        order = [2, 0, 3, 1]
+        sess = _session(geo, n_steps=4, impl="reference")
+        for k in order:
+            sess.update(proj[4 * k:4 * (k + 1)], (4 * k, 4 * (k + 1)))
+        vol = np.asarray(sess.finalize())
+
+        # the fused engine's own stages, fed the permuted stream
+        perm = np.concatenate([np.arange(4 * k, 4 * (k + 1))
+                               for k in order])
+        q = np.asarray(filter_projections(geo, proj))[perm]
+        pm = np.asarray(projection_matrices(geo))[perm]
+        oracle_perm = np.asarray(backproject_reference(
+            pm, q, geo.n_x, geo.n_y, geo.n_z)) * fdk_scale(geo)
+        np.testing.assert_array_equal(vol, oracle_perm)
+
+        # ... and within f32 reassociation tolerance of the canonical one
+        rel = np.max(np.abs(vol - fused_oracle)) / np.max(
+            np.abs(fused_oracle))
+        assert rel < 5e-6
+
+    @pytest.mark.parametrize("precision", ["bf16", "fp8_e4m3"])
+    def test_codec_floor(self, geo, proj, fused_oracle, precision):
+        """Quantized streams: in-order incremental is bit-identical to the
+        same-codec fused engine (identical per-projection quantization,
+        identical addition order), and within the codec's documented floor
+        of the f32 oracle."""
+        oracle_codec = np.asarray(ReconstructionPlan(
+            geometry=geo, precision=precision).build()(proj))
+        sess = _session(geo, n_steps=4, precision=precision)
+        for k in range(4):
+            sess.update(proj[4 * k:4 * (k + 1)], (4 * k, 4 * (k + 1)))
+        vol = np.asarray(sess.finalize())
+        np.testing.assert_array_equal(vol, oracle_codec)
+        rel = np.max(np.abs(vol - fused_oracle)) / np.max(
+            np.abs(fused_oracle))
+        assert rel < Precision(precision).max_tol()
+
+    def test_pipelined_n_steps_1_equals_fused(self, geo, proj,
+                                              fused_oracle):
+        """Degenerate micro-batching: one step, zero-length scan prologue —
+        must be the fused result exactly."""
+        out = np.asarray(ReconstructionPlan(
+            geometry=geo, schedule="pipelined", n_steps=1).build()(proj))
+        np.testing.assert_array_equal(out, fused_oracle)
+
+    def test_incremental_n_steps_1_equals_fused(self, geo, proj,
+                                                fused_oracle):
+        """One delta covering the whole scan == the fused engine."""
+        sess = _session(geo, n_steps=1)
+        vol = np.asarray(sess.update(proj, (0, 16), finalize=True))
+        np.testing.assert_array_equal(vol, fused_oracle)
+
+
+class TestStagedFold:
+    def test_staged_equals_raw(self, geo, proj, fused_oracle):
+        sess = _session(geo, n_steps=4)
+        for k in range(4):
+            staged = sess.stage(proj[4 * k:4 * (k + 1)],
+                                (4 * k, 4 * (k + 1)))
+            assert isinstance(staged, StagedDelta)
+            sess.update(staged)
+        np.testing.assert_array_equal(np.asarray(sess.finalize()),
+                                      fused_oracle)
+
+    def test_fused_epilogue_matches_finalize(self, geo, proj,
+                                             fused_oracle):
+        """update(staged, finalize=True) — the one-dispatch tail — returns
+        the same volume finalize() would."""
+        sess = _session(geo, n_steps=2)
+        sess.update(proj[:8], (0, 8))
+        vol = np.asarray(sess.update(sess.stage(proj[8:], (8, 16)),
+                                     finalize=True))
+        np.testing.assert_array_equal(vol, fused_oracle)
+        # the session state is folded too: finalize() agrees
+        np.testing.assert_array_equal(np.asarray(sess.finalize()), vol)
+
+    def test_staged_rejects_angle_slice(self, geo, proj):
+        sess = _session(geo)
+        staged = sess.stage(proj[:4], (0, 4))
+        with pytest.raises(TypeError, match="carries its own angle range"):
+            sess.update(staged, (0, 4))
+
+    def test_stage_is_pure(self, geo, proj):
+        sess = _session(geo)
+        sess.stage(proj[:4], (0, 4))
+        assert sess.n_folded == 0
+
+
+class TestSessionGuards:
+    def test_double_fold_rejected(self, geo, proj):
+        sess = _session(geo)
+        sess.update(proj[:4], (0, 4))
+        with pytest.raises(ValueError, match="already folded"):
+            sess.update(proj[:4], (0, 4))
+
+    def test_staged_double_fold_rejected(self, geo, proj):
+        """Coverage is re-checked at fold time, not just at stage time."""
+        sess = _session(geo)
+        staged = sess.stage(proj[:4], (0, 4))
+        sess.update(proj[:4], (0, 4))
+        with pytest.raises(ValueError, match="already folded"):
+            sess.update(staged)
+
+    def test_out_of_range_rejected(self, geo, proj):
+        with pytest.raises(ValueError, match="out of range"):
+            _session(geo).update(proj[:4], (12, 20))
+
+    def test_shape_mismatch_rejected(self, geo, proj):
+        with pytest.raises(ValueError, match="does not match angles"):
+            _session(geo).update(proj[:4], (0, 8))
+
+    def test_raw_delta_requires_angle_slice(self, geo, proj):
+        with pytest.raises(TypeError, match="angle_slice is required"):
+            _session(geo).update(proj[:4])
+
+    def test_incomplete_finalize_raises_with_pending(self, geo, proj):
+        sess = _session(geo)
+        sess.update(proj[4:8], (4, 8))
+        with pytest.raises(ValueError, match=r"\[\(0, 4\), \(8, 16\)\]"):
+            sess.finalize()
+
+    def test_partial_peek(self, geo, proj):
+        """partial=True returns the limited-angle reconstruction and keeps
+        the session open."""
+        sess = _session(geo, n_steps=2)
+        sess.update(proj[:8], (0, 8))
+        peek = np.asarray(sess.finalize(partial=True))
+        assert np.isfinite(peek).all()
+        sess.update(proj[8:], (8, 16))   # still accepts updates
+        assert sess.is_complete
+
+    def test_build_rejects_incremental(self, geo):
+        plan = ReconstructionPlan(geometry=geo, schedule="incremental",
+                                  n_steps=2)
+        with pytest.raises(ValueError, match="build_incremental"):
+            plan.build()
+
+    def test_build_incremental_rejects_batch(self, geo):
+        with pytest.raises(ValueError, match="schedule='incremental'"):
+            ReconstructionPlan(geometry=geo).build_incremental()
+
+
+# ---------------------------------------------------------------------------
+# choose_grid regressions (satellite bugfixes)
+# ---------------------------------------------------------------------------
+
+
+class TestChooseGridRegressions:
+    def test_detector_term_alone_too_big_raises(self):
+        """The old loop spun forever here: doubling R only shrinks the
+        volume term, never the detector working set."""
+        g = default_geometry(64)
+        with pytest.raises(ValueError, match="detector working set"):
+            choose_grid(g, 8, hbm_bytes=4 * g.n_u * g.n_v * 32 - 1)
+
+    def test_r_not_tiling_nx_raises_at_choice_time(self):
+        """An R the memory bound forces but N_x cannot tile is rejected
+        where the number comes from, not later by validate()."""
+        g = default_geometry(48)
+        with pytest.raises(ValueError, match="does not tile N_x=48"):
+            choose_grid(g, 64, sub_vol_bytes=16 * 1024)
+
+
+# ---------------------------------------------------------------------------
+# Delta discovery protocol + streaming I/O
+# ---------------------------------------------------------------------------
+
+
+class TestStreamingStore:
+    def test_append_region_grows_manifest(self, tmp_path):
+        path = str(tmp_path / "store")
+        shard_store.init_store(path, (8, 4, 4), np.float32)
+        assert shard_store.read_manifest(path)["shards"] == []
+        data = np.arange(2 * 4 * 4, dtype=np.float32).reshape(2, 4, 4)
+        shard_store.append_region(path, ((0, 2), (0, 4), (0, 4)), data)
+        got = shard_store.read_region(path, ((0, 2), (0, 4), (0, 4)))
+        np.testing.assert_array_equal(got, data)
+
+    def test_append_overlap_rejected(self, tmp_path):
+        path = str(tmp_path / "store")
+        shard_store.init_store(path, (8, 4, 4), np.float32)
+        d = np.zeros((2, 4, 4), np.float32)
+        shard_store.append_region(path, ((0, 2), (0, 4), (0, 4)), d)
+        with pytest.raises(shard_store.StoreError, match="overlap"):
+            shard_store.append_region(path, ((1, 3), (0, 4), (0, 4)),
+                                      d)
+
+    def test_poll_discovers_committed_deltas(self, geo, proj, tmp_path):
+        path = str(tmp_path / "proj")
+        w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u))
+        src = ProjectionSource(path)
+        assert src.poll() == []
+        w.append(proj[:4], 0)
+        w.append(proj[8:12], 8)
+        assert src.poll() == [(0, 4), (8, 12)]
+        # poll is read-only: ranges stay visible until iter_deltas consumes
+        assert src.poll() == [(0, 4), (8, 12)]
+        seen = [(lo, hi) for lo, hi, _ in src.iter_deltas()]
+        assert seen == [(0, 4), (8, 12)]
+        assert src.poll() == []
+        w.append(proj[4:8], 4)
+        assert src.poll() == [(4, 8)]
+
+    def test_poll_missing_store_is_empty(self, tmp_path):
+        assert ProjectionSource(str(tmp_path / "nowhere")).poll() == []
+
+    def test_load_slice_matches_source(self, geo, proj, tmp_path):
+        path = str(tmp_path / "proj")
+        w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u))
+        w.append(proj, 0)
+        got = np.asarray(ProjectionSource(path).load_slice(4, 12))
+        np.testing.assert_array_equal(got, proj[4:12])
+
+    def test_scaled_codec_round_trip(self, geo, proj, tmp_path):
+        """fp8 streaming store: sidecar committed before data, load_slice
+        decodes data x scales — bit-identical to the codec round-trip."""
+        path = str(tmp_path / "proj")
+        w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u),
+                                      codec="fp8_e4m3")
+        w.append(proj[:8], 0)
+        prec = Precision("fp8_e4m3")
+        data, scales = prec.codec.encode(proj[:8])
+        expect = np.asarray(prec.codec.decode(data, scales))
+        got = np.asarray(ProjectionSource(path).load_slice(0, 8))
+        np.testing.assert_array_equal(got, expect)
+        assert os.path.exists(os.path.join(path, "scales",
+                                           shard_store.MANIFEST))
+
+    def test_session_poll_folds_and_finalizes(self, geo, proj, tmp_path,
+                                              fused_oracle):
+        """The full discovery loop: scanner appends, session.poll folds,
+        finalize streams to the sink — matches the fused engine."""
+        path = str(tmp_path / "proj")
+        w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u))
+        src = ProjectionSource(path)
+        sink = VolumeSink(str(tmp_path / "vol"))
+        plan = ReconstructionPlan(geometry=geo, schedule="incremental",
+                                  n_steps=4)
+        sess = plan.build_incremental(source=src, sink=sink)
+        assert sess.poll() == 0
+        w.append(proj[:8], 0)
+        assert sess.poll() == 1
+        assert sess.pending_ranges() == [(8, 16)]
+        w.append(proj[8:12], 8)
+        w.append(proj[12:16], 12)
+        assert sess.poll() == 2
+        vol = np.asarray(sess.finalize())
+        np.testing.assert_array_equal(vol, fused_oracle)
+        np.testing.assert_array_equal(sink.read(), fused_oracle)
+
+    def test_poll_without_source_raises(self, geo):
+        with pytest.raises(TypeError, match="without a ProjectionSource"):
+            _session(geo).poll()
+
+
+class TestVolumeSinkLayout:
+    def test_canonical_store_has_no_layout(self, tmp_path):
+        sink = VolumeSink(str(tmp_path / "vol"))
+        vol = np.arange(4 * 4 * 4, dtype=np.float32).reshape(4, 4, 4)
+        sink.write(vol)
+        assert sink.layout() is None
+        np.testing.assert_array_equal(sink.read(), vol)
+
+    def test_y_chunk_major_round_trip(self, tmp_path):
+        """The chunked+scatter engine's 4-D accumulator layout is recorded
+        in the manifest and canonicalized on read."""
+        vol = np.arange(4 * 8 * 4, dtype=np.float32).reshape(4, 8, 4)
+        chunked = vol.reshape(4, 2, 4, 4)     # (N_x, y_chunks, yc, N_z)
+        sink = VolumeSink(str(tmp_path / "vol"))
+        sink.write(chunked, layout={"kind": "y_chunk_major", "y_chunks": 2})
+        assert sink.layout() == {"kind": "y_chunk_major", "y_chunks": 2}
+        np.testing.assert_array_equal(sink.read(), vol)
+
+    def test_unknown_layout_raises(self, tmp_path):
+        sink = VolumeSink(str(tmp_path / "vol"))
+        sink.write(np.zeros((2, 2, 2, 2), np.float32),
+                   layout={"kind": "z_order"})
+        with pytest.raises(shard_store.StoreError, match="unknown layout"):
+            sink.read()
+
+
+# ---------------------------------------------------------------------------
+# Planner pricing of the incremental schedule
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalPlanner:
+    def test_spec_pins_incremental(self, geo):
+        plan = plan_from_spec(
+            geo, "auto,schedule=incremental,n_steps=2,impl=factorized")
+        assert plan.schedule == "incremental"
+        assert plan.n_steps == 2
+
+    def test_time_from_last_delta_rejects_batch_points(self, geo):
+        point = point_from_plan(ReconstructionPlan(geometry=geo))
+        with pytest.raises(ValueError, match="incremental"):
+            time_from_last_delta(geo, point)
+
+    def test_tail_is_a_fraction_of_batch_runtime(self):
+        g = default_geometry(256, n_proj=256)
+        plan = ReconstructionPlan(geometry=g, schedule="incremental",
+                                  n_steps=4)
+        point = point_from_plan(plan)
+        tail = time_from_last_delta(g, point)
+        assert 0 < tail < predict_point(g, point).t_runtime
+
+    def test_footprint_holds_resident_state(self, geo):
+        """The session keeps old + new accumulator live across the fold
+        (no donation): 2x the fused slab under psum."""
+        fused = plan_footprint(
+            geo, point_from_plan(ReconstructionPlan(geometry=geo)))
+        incr = plan_footprint(geo, point_from_plan(ReconstructionPlan(
+            geometry=geo, schedule="incremental", n_steps=2)))
+        assert incr.slab == 2 * fused.slab
+
+
+# ---------------------------------------------------------------------------
+# Benchmark JSON persistence (the BENCH_streaming.json trajectory file)
+# ---------------------------------------------------------------------------
+
+
+def test_bench_write_json(tmp_path):
+    sys.path.insert(0, os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..")))
+    from benchmarks.bench_streaming import write_json
+    path = str(tmp_path / "BENCH_streaming.json")
+    write_json(path, [("streaming/x/t_last_delta", 12.5, "OK")])
+    rows = json.loads(open(path).read())
+    assert rows == [{"name": "streaming/x/t_last_delta",
+                     "us_per_call": 12.5, "derived": "OK"}]
+
+
+# ---------------------------------------------------------------------------
+# mesh cross-product (subprocess: needs 8 virtual devices)
+# ---------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, tempfile
+import jax, numpy as np
+from repro.core.distributed import input_sharding
+from repro.core.geometry import default_geometry
+from repro.core.phantom import forward_project
+from repro.core.plan import ReconstructionPlan
+from repro.io.streams import (ProjectionSource, StreamingProjectionWriter,
+                              VolumeSink)
+from repro.parallel.mesh import make_mesh
+
+results = {}
+g = default_geometry(16, n_proj=16)
+proj = np.asarray(forward_project(g))
+mesh = make_mesh((2, 2), ("data", "model"))
+ref = np.asarray(jax.device_get(ReconstructionPlan(geometry=g).build()(
+    proj)))
+refmax = float(np.max(np.abs(ref)))
+
+def rel(v):
+    return float(np.max(np.abs(np.asarray(v) - ref))) / refmax
+
+for red in ("psum", "scatter", "scatter_bf16"):
+    plan = ReconstructionPlan(geometry=g, mesh=mesh, schedule="incremental",
+                              n_steps=2, reduce=red)
+    # raw in-order deltas
+    s = plan.build_incremental()
+    s.update(proj[:8], (0, 8)); s.update(proj[8:], (8, 16))
+    v_raw = np.asarray(jax.device_get(s.finalize()))
+    results[f"incr/{red}/in_order"] = rel(v_raw)
+    # staged path with the fused last-delta epilogue: same bytes
+    s2 = plan.build_incremental()
+    s2.update(s2.stage(proj[:8], (0, 8)))
+    v_staged = np.asarray(jax.device_get(
+        s2.update(s2.stage(proj[8:], (8, 16)), finalize=True)))
+    results[f"incr/{red}/staged_eq_raw"] = bool(
+        np.array_equal(v_raw, v_staged))
+    # out-of-order folding: reassociation-level agreement only
+    s3 = plan.build_incremental()
+    s3.update(proj[8:], (8, 16)); s3.update(proj[:8], (0, 8))
+    results[f"incr/{red}/any_order"] = rel(jax.device_get(s3.finalize()))
+
+# full streaming loop on the mesh: scanner writes, session polls off the
+# store, finalize streams to the sink
+td = tempfile.mkdtemp()
+w = StreamingProjectionWriter(os.path.join(td, "proj"),
+                              (g.n_proj, g.n_v, g.n_u))
+src = ProjectionSource(os.path.join(td, "proj"))
+sink = VolumeSink(os.path.join(td, "vol"))
+plan = ReconstructionPlan(geometry=g, mesh=mesh, schedule="incremental",
+                          n_steps=2)
+sess = plan.build_incremental(source=src, sink=sink)
+w.append(proj[:8], 0)
+n1 = sess.poll()
+w.append(proj[8:], 8)
+n2 = sess.poll()
+sess.finalize()
+results["stream_loop/polls"] = [n1, n2]
+results["stream_loop/sink"] = rel(sink.read())
+
+# chunked+scatter engine -> VolumeSink: the 4-D y_chunk-major layout must
+# round-trip through the manifest record back to the canonical volume
+sink2 = VolumeSink(os.path.join(td, "vol_chunked"))
+plan2 = ReconstructionPlan(geometry=g, mesh=mesh, schedule="chunked",
+                           n_steps=2, y_chunks=4, reduce="scatter")
+src_all = ProjectionSource.write(os.path.join(td, "proj_all"), proj,
+                                 chunks=(4, 1, 1))
+plan2.build(source=src_all, sink=sink2)()
+results["chunked_sink/layout"] = sink2.layout()
+results["chunked_sink/rel"] = rel(sink2.read())
+
+print("RESULTS" + json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def mesh_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True,
+        text=True, timeout=1200)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS")][0]
+    return json.loads(line[len("RESULTS"):])
+
+
+BF16_REDUCE_RTOL = 4 * 2.0 ** -8
+
+
+@pytest.mark.slow
+def test_incremental_on_mesh(mesh_results):
+    for red in ("psum", "scatter"):
+        assert mesh_results[f"incr/{red}/in_order"] < 5e-6
+        assert mesh_results[f"incr/{red}/any_order"] < 5e-6
+    assert mesh_results["incr/scatter_bf16/in_order"] < BF16_REDUCE_RTOL
+    assert mesh_results["incr/scatter_bf16/any_order"] < BF16_REDUCE_RTOL
+
+
+@pytest.mark.slow
+def test_staged_equals_raw_on_mesh(mesh_results):
+    """stage+fold must produce the identical bytes the raw update path
+    does, for every reduce (same jitted fold, different entry point)."""
+    for red in ("psum", "scatter", "scatter_bf16"):
+        assert mesh_results[f"incr/{red}/staged_eq_raw"] is True
+
+
+@pytest.mark.slow
+def test_streaming_loop_on_mesh(mesh_results):
+    assert mesh_results["stream_loop/polls"] == [1, 1]
+    assert mesh_results["stream_loop/sink"] < 5e-6
+
+
+@pytest.mark.slow
+def test_chunked_scatter_sink_layout_on_mesh(mesh_results):
+    """ISSUE satellite: the chunked+scatter engine streams its 4-D
+    y_chunk-major accumulator into the sink; the manifest record must
+    restore the canonical (N_x, N_y, N_z) volume."""
+    assert mesh_results["chunked_sink/layout"] == {
+        "kind": "y_chunk_major", "y_chunks": 4}
+    assert mesh_results["chunked_sink/rel"] < 5e-6
