@@ -1,0 +1,149 @@
+"""Reconstruction-as-a-service throughput: scans/hour at a fixed fleet.
+
+One scan reconstructed fast is the paper's claim; a serving deployment
+cares how many *scans per hour* the same fleet sustains. This suite prices
+the service path (repro/service: plan cache + geometry-bucketed batched
+engine + prefetch/write-behind) against the loop it replaces:
+
+  serial_cold    the naive service: every request pays planner search
+                 (`plan_from_spec(g, "auto")`), an engine build + compile
+                 (caches cleared), then a single-scan reconstruction. This
+                 is what admission costs without the plan/engine caches.
+  serial_warm    the steady-state serial loop: one warm single-scan engine,
+                 scans reconstructed one dispatch at a time. Isolates the
+                 batching win from the caching win. (On the CPU backend a
+                 single scan already saturates the cores, so expect the
+                 batched dispatch to run at ~0.8x warm-serial per scan —
+                 batching pays on accelerators with spare occupancy; the
+                 caching win is what this host can demonstrate.)
+  service        ReconstructionService.submit x B + drain() on warm caches:
+                 one planner search per family ever, one vmapped dispatch
+                 per bucket of B scans.
+
+Acceptance (ISSUE 7): a bucket of >= 4 same-geometry scans must serve
+>= 2x the scans/hour of the serial single-scan loop. Each service row's
+`derived` carries scans_per_hour plus the speedups against both baselines
+and an OK/MISS verdict. serial_warm and service are sampled interleaved
+(min-of-iters, bench_streaming idiom) so host drift cannot pick the
+winner; serial_cold is compile-dominated and sampled separately.
+`main()` (or ``run.py --json``) persists rows as BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# `python benchmarks/bench_serving.py` puts benchmarks/ (not the repo
+# root) on sys.path; make the documented direct invocation work.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_streaming import _interleaved_best, write_json
+from repro.core.geometry import default_geometry
+from repro.core.phantom import forward_project
+from repro.core.plan import clear_engine_cache, plan_from_spec
+from repro.service import ReconstructionService
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+
+def _scans_per_hour(per_scan_s: float) -> float:
+    return 3600.0 / per_scan_s
+
+
+def _time_serial_cold(g, scans, iters: int) -> float:
+    """Per-scan seconds for the no-cache loop: planner search + engine
+    build + compile + reconstruct, per request."""
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for s in scans:
+            clear_engine_cache()
+            plan = plan_from_spec(g, "auto")
+            jax.block_until_ready(plan.build()(s))
+        best = min(best, (time.perf_counter() - t0) / len(scans))
+    return best
+
+
+def run(iters: int = 5, fast: bool = False):
+    rows = []
+    cases = [(32, 64, 4)] if fast else [(32, 64, 4), (48, 96, 8)]
+    for n, npj, bucket in cases:
+        g = default_geometry(n, n_proj=npj)
+        base = jnp.asarray(forward_project(g))
+        # distinct same-geometry scans (one family, different data)
+        scans = [base * (1.0 + 0.1 * k) for k in range(bucket)]
+        label = f"serving/{n}^3x{npj}/B{bucket}"
+
+        # steady-state serial baseline: one warm single-scan engine
+        clear_engine_cache()
+        serial_engine = plan_from_spec(g, "auto").build()
+
+        svc = ReconstructionService(max_batch=bucket)
+
+        def service_round():
+            tickets = [svc.submit(projections=s, geometry=g) for s in scans]
+            svc.drain()
+            jax.block_until_ready(tickets[-1].volume)
+
+        def serial_round():
+            for s in scans:
+                jax.block_until_ready(serial_engine(s))
+
+        t_warm, t_svc = _interleaved_best([serial_round, service_round],
+                                          iters)
+        t_warm /= bucket
+        t_svc /= bucket
+        t_cold = _time_serial_cold(g, scans, max(2, iters // 2))
+
+        st = svc.stats()
+        assert st["plan_cache"]["searches"] == 1, st["plan_cache"]
+        svc.close()
+
+        sph_cold = _scans_per_hour(t_cold)
+        sph_warm = _scans_per_hour(t_warm)
+        sph_svc = _scans_per_hour(t_svc)
+        speedup = sph_svc / sph_cold
+        rows.append((f"{label}/serial_cold", t_cold * 1e6,
+                     f"scans_per_hour={sph_cold:.0f} searches_per_scan=1"))
+        rows.append((f"{label}/serial_warm", t_warm * 1e6,
+                     f"scans_per_hour={sph_warm:.0f}"))
+        rows.append((
+            f"{label}/service", t_svc * 1e6,
+            f"scans_per_hour={sph_svc:.0f} "
+            f"speedup_vs_cold={speedup:.2f}x "
+            f"speedup_vs_warm={sph_svc / sph_warm:.2f}x "
+            f"plan_searches={st['plan_cache']['searches']} "
+            f"{'OK' if speedup >= 2.0 else 'MISS'}",
+        ))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="reconstruction-as-a-service throughput bench")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--json", nargs="?", const=JSON_PATH, default=None,
+                    metavar="PATH",
+                    help=f"persist rows as JSON (default {JSON_PATH})")
+    args = ap.parse_args(argv)
+    rows = run(iters=args.iters, fast=args.fast)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        write_json(args.json, rows)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main(argv=None) -> None:
     from benchmarks import (
         bench_backprojection, bench_end_to_end, bench_filtering, bench_io,
-        bench_scaling_model, bench_streaming, plan_search, roofline_table,
+        bench_scaling_model, bench_serving, bench_streaming, plan_search,
+        roofline_table,
     )
     suites = [
         ("table4", bench_backprojection.run),     # BP kernel GUPS sweep
@@ -35,6 +36,7 @@ def main(argv=None) -> None:
         ("table5_fig5", bench_scaling_model.run),  # scaling model vs paper
         ("fig6", bench_end_to_end.run),           # end-to-end GUPS
         ("streaming", bench_streaming.run),       # time-from-last-delta
+        ("serving", bench_serving.run),           # scans/hour at fixed fleet
         ("roofline", roofline_table.run),         # dry-run roofline terms
         ("plan_search", plan_search.run),         # auto-planner ranked table
         ("io", bench_io.run),                     # shard-store read/write GB/s

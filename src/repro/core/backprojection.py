@@ -115,7 +115,14 @@ def backproject_reference(pmats: Array, proj: Array,
         f = 1.0 / z
         u = x * f
         v = y * f
-        w = f * f * s                   # codec decode folded into the weight
+        w0 = f * f
+        # Pin the coordinate chain: without the barrier XLA may contract
+        # these FMAs differently when the surrounding program changes (e.g.
+        # under vmap in build_batched), breaking the batched == unbatched
+        # bit-exactness contract. Only P-derived (batch-invariant) values go
+        # through it — optimization_barrier has no vmap batching rule.
+        u, v, w0 = jax.lax.optimization_barrier((u, v, w0))
+        w = w0 * s                      # codec decode folded into the weight
         acc = acc + w * bilinear_gather(q, v, u)  # rows = v, cols = u
         return acc, None
 
@@ -177,11 +184,17 @@ def backproject_factorized(pmats: Array, proj: Array,
         p, q, s = sp
         qt = q.T  # \tilde{Q}: (N_u, N_v), v contiguous
         u, w, y0, dy, f = column_terms(p, nx, ny)
-        w = w * s                       # codec decode folded into the weight
         v = (y0[..., None] + dy * k) * f[..., None]        # (nx, ny, nzh)
         ub = jnp.broadcast_to(u[..., None], v.shape)
-        front = w[..., None] * bilinear_gather(qt, ub, v)   # rows=u, cols=v
         vm = (n_v - 1.0) - v                                # Theorem-1 mirror
+        # Pin the coordinate chain so batched (vmap) and unbatched
+        # compilations contract its FMAs identically — the build_batched
+        # bit-exactness contract. Only P-derived (batch-invariant) values go
+        # through the barrier; the per-projection scale `s` may carry a vmap
+        # batch dim and optimization_barrier has no batching rule.
+        ub, v, vm, w = jax.lax.optimization_barrier((ub, v, vm, w))
+        w = w * s                       # codec decode folded into the weight
+        front = w[..., None] * bilinear_gather(qt, ub, v)   # rows=u, cols=v
         back = w[..., None] * bilinear_gather(qt, ub, vm)
         return (acc_f + front, acc_b + back), None
 

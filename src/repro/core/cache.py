@@ -1,0 +1,136 @@
+"""Counting, bounded LRU cache — the one cache primitive behind the engine
+cache (core/plan.py) and the service plan cache (repro/service).
+
+Both caches hold expensive build artifacts (jitted engines, planner-search
+results) keyed by hashable plan-like values, and both need the same three
+things the plain dict they replace did not have:
+
+  * a bound — engines pin compiled XLA executables; an unbounded cache is a
+    memory leak under a long-lived service seeing many scan families;
+  * counters — the service surfaces hit/miss/eviction counts in its stats,
+    and the ISSUE-7 acceptance check ("second request in a family does zero
+    planner-search work") is read directly off them;
+  * a defined unhashable path — exotic keys (e.g. a mesh subclass that
+    raises in __hash__) must fall through to an uncached build, *counted*,
+    instead of silently disabling caching with a bare try/except.
+
+Thread-safety: a single lock around the OrderedDict; `get_or_build` may
+build the same value twice under a race but never corrupts the map (last
+writer wins) — the artifacts are pure, so duplicated work is the only cost.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+_MISSING = object()
+
+
+class CountingLRU:
+    """Bounded LRU mapping with hit/miss/eviction/unhashable counters.
+
+    capacity <= 0 disables storage entirely (every get is a miss, every put
+    a no-op) — useful to switch caching off without touching call sites.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self.capacity = int(capacity)
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.unhashable = 0
+
+    # -- mapping core --------------------------------------------------------
+
+    def get(self, key: Any, default: Any = None) -> Any:
+        """Counted lookup; unhashable keys count and return `default`."""
+        try:
+            with self._lock:
+                val = self._data.get(key, _MISSING)
+                if val is _MISSING:
+                    self.misses += 1
+                    return default
+                self._data.move_to_end(key)
+                self.hits += 1
+                return val
+        except TypeError:
+            with self._lock:
+                self.unhashable += 1
+            return default
+
+    def put(self, key: Any, value: Any) -> None:
+        """Insert/refresh; evicts the least-recently-used entry past
+        capacity. Unhashable keys count and are dropped."""
+        try:
+            with self._lock:
+                if self.capacity <= 0:
+                    return
+                if key in self._data:
+                    self._data.move_to_end(key)
+                self._data[key] = value
+                while len(self._data) > self.capacity:
+                    self._data.popitem(last=False)
+                    self.evictions += 1
+        except TypeError:
+            with self._lock:
+                self.unhashable += 1
+
+    def get_or_build(self, key: Any, build: Callable[[], Any]) -> Any:
+        """Counted get, building (and caching) on miss. Unhashable keys
+        build uncached — counted once per resolve, never raised."""
+        try:
+            hash(key)
+        except TypeError:
+            with self._lock:
+                self.unhashable += 1
+            return build()
+        val = self.get(key, _MISSING)
+        if val is not _MISSING:
+            return val
+        val = build()
+        self.put(key, val)
+        return val
+
+    # -- introspection -------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: Any) -> bool:
+        try:
+            with self._lock:
+                return key in self._data
+        except TypeError:
+            return False
+
+    def keys(self):
+        with self._lock:
+            return list(self._data.keys())
+
+    def clear(self, reset_counters: bool = False) -> None:
+        with self._lock:
+            self._data.clear()
+            if reset_counters:
+                self.hits = self.misses = 0
+                self.evictions = self.unhashable = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "size": len(self._data),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "unhashable": self.unhashable,
+            }
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        s = self.stats()
+        return (f"CountingLRU(size={s['size']}/{s['capacity']}, "
+                f"hits={s['hits']}, misses={s['misses']}, "
+                f"evictions={s['evictions']}, unhashable={s['unhashable']})")

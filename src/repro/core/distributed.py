@@ -139,6 +139,13 @@ def input_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, _proj_spec(mesh))
 
 
+def batched_input_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding of a (B, N_p, N_v, N_u) scan batch for
+    `ReconstructionPlan.build_batched`: the scan axis is replicated, each
+    scan's projections are sharded exactly like `input_sharding`."""
+    return NamedSharding(mesh, P(None, *_proj_spec(mesh)))
+
+
 def output_spec(mesh: Mesh,
                 reduce: Literal["psum", "scatter", "scatter_bf16"]) -> P:
     if reduce in SCATTER_REDUCES:

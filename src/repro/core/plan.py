@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.compat import shard_map
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
+from .cache import CountingLRU
 from .distributed import (
     IFDKGrid, SCATTER_REDUCES, _proj_spec, input_sharding, output_spec,
     shift_pmats_i,
@@ -63,16 +64,24 @@ ReduceMode = Literal["psum", "scatter", "scatter_bf16"]
 _SCHEDULES = ("fused", "pipelined", "chunked", "incremental")
 _REDUCES = ("psum",) + SCATTER_REDUCES
 _IMPLS = ("reference", "factorized", "kernel")
-_PRECISIONS = ("fp32", "bf16", "fp16", "fp8_e4m3")
+_PRECISIONS = ("fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2")
 
-# build() results, keyed by the (hashable) plan: repeated builds of the same
-# plan reuse the jitted function, so `reconstruct(...)`-style per-call
-# wrappers never re-trace.
-_ENGINE_CACHE: dict = {}
+# build()/build_batched() results, keyed by the (hashable) plan (plus batch
+# size for batched engines): repeated builds of the same plan reuse the
+# jitted function, so `reconstruct(...)`-style per-call wrappers never
+# re-trace. Bounded LRU: engines pin compiled XLA executables, and a
+# long-lived service seeing many scan families must not leak them; the
+# hit/miss counters feed the service stats (repro/service).
+_ENGINE_CACHE = CountingLRU(capacity=64)
 
 
 def clear_engine_cache() -> None:
     _ENGINE_CACHE.clear()
+
+
+def engine_cache_stats() -> dict:
+    """hit/miss/eviction/unhashable counters of the shared engine cache."""
+    return _ENGINE_CACHE.stats()
 
 
 def bp_call_shape(g: CBCTGeometry, r: int, c: int, schedule: str,
@@ -104,6 +113,8 @@ class _Stages:
     slab reparameterization and row-reduce logic is defined."""
 
     gather_batch: Callable   # (pm_b, raw_b) -> (pm_col, q_col, scales_col)
+    filter_encode: Callable  # raw_b -> (data_b, scales_b)  [no collectives]
+    gather_cols: Callable    # (pm_b, data_b, scales_b) -> gathered columns
     slab_pmats: Callable     # pm_col -> P shifted to this rank's x-slab
     reduce_slab: Callable    # full-slab row-reduce epilogue (fused/pipelined)
     backproject: Callable    # resolved impl (tuned blocks for "kernel")
@@ -355,8 +366,14 @@ class ReconstructionPlan:
         # --- stage: filter + encode + column AllGather (paper Fig. 3b) -----
         # The AllGather moves the codec's WIRE format: quantized data plus,
         # for scaled codecs (fp8), the per-projection f32 scale sidecar.
-        def gather_batch(pm_b: Array, raw_b: Array):
-            data, scales = codec.encode(filt(raw_b))
+        # Split in two: `filter_encode` is per-projection-independent and
+        # collective-free (the batched engine hoists it out of its vmap —
+        # the FFT must not see a vmap batch dim, see build_batched), while
+        # `gather_cols` moves the wire bytes over the model axis.
+        def filter_encode(raw_b: Array):
+            return codec.encode(filt(raw_b))
+
+        def gather_cols(pm_b: Array, data: Array, scales):
             if model_axis is None:
                 return pm_b, data, scales
             gathered_scales = (
@@ -365,6 +382,9 @@ class ReconstructionPlan:
             return (lax.all_gather(pm_b, model_axis, axis=0, tiled=True),
                     lax.all_gather(data, model_axis, axis=0, tiled=True),
                     gathered_scales)
+
+        def gather_batch(pm_b: Array, raw_b: Array):
+            return gather_cols(pm_b, *filter_encode(raw_b))
 
         # --- stage: x-slab reparameterization (offset folded into P) -------
         def slab_pmats(pm_col: Array) -> Array:
@@ -395,7 +415,8 @@ class ReconstructionPlan:
             return slab
 
         return _Stages(
-            gather_batch=gather_batch, slab_pmats=slab_pmats,
+            gather_batch=gather_batch, filter_encode=filter_encode,
+            gather_cols=gather_cols, slab_pmats=slab_pmats,
             reduce_slab=reduce_slab,
             backproject=self._resolve_backprojector(),
             nx_slab=nx_slab, scale=fdk_scale(g),
@@ -403,12 +424,28 @@ class ReconstructionPlan:
             dp=dp,
         )
 
-    def _build_rank_fn(self) -> Callable[[Array, Array], Array]:
-        """Compose the shared stage primitives into one per-rank function."""
+    def _build_rank_fn(self, st: Optional[_Stages] = None,
+                       encoded: bool = False) -> Callable:
+        """Compose the shared stage primitives into one per-rank function.
+
+        encoded=False (the build() path): rank_fn(pm_local, proj_local)
+        takes RAW per-rank projections and runs filter + encode inline
+        (inside the scan for the micro-batched schedules).
+
+        encoded=True (the build_batched() path): rank_fn(pm_local,
+        data_local, sc_local) takes the codec's WIRE-format stream (+ scale
+        sidecar, or None) and starts at the column AllGather — the batched
+        engine hoists filter_encode out of its vmap, because XLA's CPU FFT
+        rejects the non-dim0-major layouts a vmap batch dim induces, and
+        filtering/encoding are per-projection-independent anyway (bit-equal
+        hoisted or inline). Both variants share ONE copy of each schedule
+        body below.
+        """
         g = self.geometry
         grid = self.grid
-        st = self._make_stages()
+        st = st if st is not None else self._make_stages()
         gather_batch = st.gather_batch
+        gather_cols = st.gather_cols
         slab_pmats = st.slab_pmats
         reduce_slab = st.reduce_slab
         backproject = st.backproject
@@ -419,23 +456,46 @@ class ReconstructionPlan:
         n_steps = self.n_steps
         nb = g.n_proj // grid.n_ranks // n_steps
 
+        # Normalize both input shapes to (payload tuple, gather callable):
+        # schedule bodies below are written once against `gath(pm_b, *pl)`.
+        if encoded:
+            def make_rank(schedule_fn):
+                def rank_fn(pm_local, data_local, sc_local=None):
+                    if sc_local is None:
+                        return schedule_fn(
+                            pm_local, (data_local,),
+                            lambda pm_b, d_b: gather_cols(pm_b, d_b, None))
+                    return schedule_fn(pm_local, (data_local, sc_local),
+                                       gather_cols)
+                return rank_fn
+        else:
+            def make_rank(schedule_fn):
+                def rank_fn(pm_local, proj_local):
+                    return schedule_fn(pm_local, (proj_local,), gather_batch)
+                return rank_fn
+
+        def split_steps(pm_local, payload):
+            pm_steps = pm_local.reshape(n_steps, nb, 3, 4)
+            steps = tuple(x.reshape((n_steps, nb) + x.shape[1:])
+                          for x in payload)
+            return pm_steps, steps
+
         if self.schedule == "fused":
-            def rank_fn(pm_local: Array, proj_local: Array) -> Array:
-                pm_col, q_col, sc_col = gather_batch(pm_local, proj_local)
+            def fused(pm_local, payload, gath):
+                pm_col, q_col, sc_col = gath(pm_local, *payload)
                 slab = backproject(slab_pmats(pm_col), q_col,
                                    nx_slab, g.n_y, g.n_z, scales=sc_col)
                 return reduce_slab(slab) * scale
-            return rank_fn
+            return make_rank(fused)
 
         if self.schedule == "pipelined":
-            def rank_fn(pm_local: Array, proj_local: Array) -> Array:
-                pm_steps = pm_local.reshape(n_steps, nb, 3, 4)
-                raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
-                buf = gather_batch(pm_steps[0], raw_steps[0])  # prologue
+            def pipelined(pm_local, payload, gath):
+                pm_steps, steps = split_steps(pm_local, payload)
+                buf = gath(pm_steps[0], *(x[0] for x in steps))  # prologue
 
                 def step(carry, xs):
                     acc, (pm_prev, q_prev, sc_prev) = carry
-                    nxt = gather_batch(*xs)        # comm for batch s
+                    nxt = gath(*xs)                # comm for batch s
                     acc = acc + backproject(        # compute for batch s-1
                         slab_pmats(pm_prev), q_prev, nx_slab, g.n_y, g.n_z,
                         scales=sc_prev)
@@ -443,12 +503,13 @@ class ReconstructionPlan:
 
                 init = (jnp.zeros((nx_slab, g.n_y, g.n_z), jnp.float32), buf)
                 (acc, (pm_last, q_last, sc_last)), _ = lax.scan(
-                    step, init, (pm_steps[1:], raw_steps[1:]))
+                    step, init,
+                    (pm_steps[1:],) + tuple(x[1:] for x in steps))
                 acc = acc + backproject(            # epilogue
                     slab_pmats(pm_last), q_last, nx_slab, g.n_y, g.n_z,
                     scales=sc_last)
                 return reduce_slab(acc) * scale
-            return rank_fn
+            return make_rank(pipelined)
 
         # chunked: per-y-chunk back-projection with an immediate per-chunk
         # reduce, bounding the live slab state (output-side streaming).
@@ -466,10 +527,9 @@ class ReconstructionPlan:
                 part = lax.psum(part, data_axis)
             return part
 
-        def rank_fn(pm_local: Array, proj_local: Array) -> Array:
-            pm_steps = pm_local.reshape(n_steps, nb, 3, 4)
-            raw_steps = proj_local.reshape(n_steps, nb, g.n_v, g.n_u)
-            buf = gather_batch(pm_steps[0], raw_steps[0])
+        def chunked(pm_local, payload, gath):
+            pm_steps, steps = split_steps(pm_local, payload)
+            buf = gath(pm_steps[0], *(x[0] for x in steps))
 
             def bp_chunks(state, pm_col, q_col, sc_col):
                 acc, err = state
@@ -505,7 +565,7 @@ class ReconstructionPlan:
 
             def step(carry, xs):
                 state, prev = carry
-                nxt = gather_batch(*xs)            # comm for batch s
+                nxt = gath(*xs)                    # comm for batch s
                 state = bp_chunks(state, *prev)    # compute for batch s-1
                 return (state, nxt), None
 
@@ -513,8 +573,9 @@ class ReconstructionPlan:
                              jnp.float32)
             err0 = (jnp.zeros((nx_slab, y_chunks, yc, g.n_z), jnp.float32)
                     if compensated else None)
-            ((acc, err), last), _ = lax.scan(step, ((acc0, err0), buf),
-                                             (pm_steps[1:], raw_steps[1:]))
+            ((acc, err), last), _ = lax.scan(
+                step, ((acc0, err0), buf),
+                (pm_steps[1:],) + tuple(x[1:] for x in steps))
             acc, _ = bp_chunks((acc, err), *last)  # epilogue
             if pod_axis is not None:
                 acc = lax.psum(acc, pod_axis)
@@ -523,7 +584,7 @@ class ReconstructionPlan:
                 acc = acc.reshape(nx_slab, g.n_y, g.n_z)
             return acc * scale
 
-        return rank_fn
+        return make_rank(chunked)
 
     def build(self, source=None, sink=None) -> Callable[[Array], Array]:
         """Validated, tuned, jitted reconstruction: projections -> volume.
@@ -553,10 +614,9 @@ class ReconstructionPlan:
                 "streaming session instead of build()")
         if source is not None or sink is not None:
             return self._build_with_io(source, sink)
-        try:
-            cached = _ENGINE_CACHE.get(self)
-        except TypeError:  # unhashable field (exotic mesh) — build uncached
-            cached = None
+        # Counted LRU: unhashable keys (exotic meshes) are counted inside
+        # and fall through to an uncached build.
+        cached = _ENGINE_CACHE.get(self)
         if cached is not None:
             return cached
         self.validate()
@@ -580,11 +640,88 @@ class ReconstructionPlan:
                     check_vma=False,
                 )(pmats_all, projections)
 
-        try:
-            _ENGINE_CACHE[self] = reconstruct_fn
-        except TypeError:
-            pass
+        _ENGINE_CACHE.put(self, reconstruct_fn)
         return reconstruct_fn
+
+    def build_batched(self, batch_size: int) -> Callable[[Array], Array]:
+        """Batched engine: reconstruct `batch_size` same-geometry scans in
+        ONE dispatch — the service layer's geometry-bucketed serving path.
+
+        Input : (B, N_p, N_v, N_u) projections, B == batch_size. On a mesh
+                each scan is sharded like build()'s input with the scan axis
+                replicated — place with `batched_input_sharding(mesh)`.
+        Output: (B, N_x, N_y, N_z) f32 (or B x the plan's 4-D chunked+
+                scatter store layout), sharded per scan like build()'s.
+
+        Exactness contract (tests/test_batched.py): lane b of the output is
+        BIT-IDENTICAL to `self.build()(projections[b])` — padding a bucket
+        with junk scans cannot perturb real ones, and a served scan equals
+        the single-scan answer exactly. Two ingredients make this hold:
+        filter+encode are hoisted out of the vmap and run on the flattened
+        (B*N_p) projection axis (per-projection-independent ops, bit-equal
+        to per-scan application; also keeps the FFT away from vmap batch
+        dims, which XLA's CPU FFT thunk rejects), and the back-projectors
+        pin their P-derived coordinate chains behind an optimization
+        barrier so batched and unbatched compilations contract FMAs
+        identically (core/backprojection.py).
+
+        Engines are cached per (plan, batch_size) in the same counted LRU
+        as build()'s.
+        """
+        if self.schedule == "incremental":
+            raise ValueError(
+                "schedule='incremental' is stateful; the batched serving "
+                "path needs a batch schedule (fused/pipelined/chunked)")
+        bsz = int(batch_size)
+        if bsz < 1:
+            raise ValueError(f"batch_size={batch_size} must be >= 1")
+        key = (self, "batched", bsz)
+        cached = _ENGINE_CACHE.get(key)
+        if cached is not None:
+            return cached
+        self.validate()
+        g = self.geometry
+        grid = self.grid
+        np_local = g.n_proj // grid.n_ranks
+        st = self._make_stages()
+        filter_encode = st.filter_encode
+        rank_enc = self._build_rank_fn(st=st, encoded=True)
+
+        def batched_rank(pm_local: Array, proj_b: Array) -> Array:
+            # proj_b: (B, np_local, N_v, N_u) — this rank's block of every
+            # scan. Filter+encode on the flattened projection axis, then
+            # vmap the collective/back-projection half over the scan axis.
+            flat = proj_b.reshape((bsz * np_local,) + proj_b.shape[2:])
+            data, scales = filter_encode(flat)
+            data = data.reshape((bsz, np_local) + data.shape[1:])
+            if scales is not None:
+                scales = scales.reshape((bsz, np_local) + scales.shape[1:])
+                return jax.vmap(rank_enc, in_axes=(None, 0, 0))(
+                    pm_local, data, scales)
+            return jax.vmap(rank_enc, in_axes=(None, 0, None))(
+                pm_local, data, None)
+
+        pmats_all = jnp.asarray(projection_matrices(g))
+        if self.mesh is None:
+            @jax.jit
+            def batched_fn(projections: Array) -> Array:
+                return batched_rank(pmats_all, projections)
+        else:
+            mesh = self.mesh
+            pspec = _proj_spec(mesh)
+            out_sp = self._output_spec()
+
+            @jax.jit
+            def batched_fn(projections: Array) -> Array:
+                return shard_map(
+                    batched_rank, mesh=mesh,
+                    in_specs=(pspec, P(None, *pspec)),
+                    out_specs=P(None, *out_sp),
+                    check_vma=False,
+                )(pmats_all, projections)
+
+        _ENGINE_CACHE.put(key, batched_fn)
+        return batched_fn
 
     def build_incremental(self, source=None, sink=None) -> "IncrementalSession":
         """Streaming reconstruction (the paper's *instant* CT): a stateful

@@ -5,4 +5,7 @@ from .shard_store import (  # noqa: F401
     HostShardedArray, StoreError, load_array, open_count, read_manifest,
     read_region, reset_open_count, save_array, snapshot, stored_spec,
 )
-from .streams import ProjectionSource, VolumeSink  # noqa: F401
+from .streams import (  # noqa: F401
+    AsyncWriteback, PrefetchError, ProjectionSource, SourcePrefetcher,
+    VolumeSink,
+)

@@ -31,8 +31,11 @@ Both are wired as optional `source=` / `sink=` stages on
 from __future__ import annotations
 
 import os
+import queue
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from functools import lru_cache
-from typing import Iterator, Optional, Sequence, Tuple
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -337,3 +340,177 @@ class VolumeSink:
         sdir = os.path.join(self.path, shard_store.SHARD_DIR)
         return sum(os.path.getsize(os.path.join(sdir, f))
                    for f in os.listdir(sdir))
+
+
+# ---------------------------------------------------------------------------
+# Inter-scan I/O overlap (repro/service): the paper overlaps filtering with
+# back-projection *within* one scan; a serving loop lifts the same idea to
+# the scan level — scan k+1's PFS reads and scan k-1's writes run on
+# background threads while scan k computes. Device dispatch stays on the
+# caller's thread; these helpers only move the host-side I/O off it.
+# ---------------------------------------------------------------------------
+
+class PrefetchError(RuntimeError):
+    """A background load failed; raised on the consumer thread by
+    `SourcePrefetcher.get` with the original exception as __cause__."""
+
+
+class SourcePrefetcher:
+    """Double-buffered background loader for a sequence of projection reads.
+
+    jobs  : sequence of zero-arg callables, each returning one scan's
+            projections (typically `lambda: source.load(mesh)` — a PFS
+            scatter-read + decode). Jobs run IN ORDER on one worker thread.
+    depth : how many loaded scans may sit ready ahead of the consumer
+            (default 2 = classic double buffering: scan k+1 loads while
+            scan k computes; memory stays bounded at `depth` scans).
+
+    State machine (DESIGN.md §Serving):
+
+        IDLE --start()--> FILLING --queue full--> BLOCKED(producer)
+        FILLING/BLOCKED --get()--> FILLING        consumer frees a slot
+        last job done --> DRAINING --get() x k--> DONE (StopIteration)
+        job raises --> FAILED: the error is queued in-order and re-raised
+                       by the matching get(); later jobs are not run.
+
+    Also iterable: ``for proj in SourcePrefetcher(jobs): ...``.
+    """
+
+    _DONE = object()
+
+    def __init__(self, jobs: Sequence[Callable[[], object]],
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth={depth} must be >= 1")
+        self._jobs = list(jobs)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._started = False
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+
+    def _worker(self) -> None:
+        for job in self._jobs:
+            if self._stop.is_set():
+                break
+            try:
+                item = (True, job())
+            except BaseException as e:  # re-raised on the consumer side
+                self._put((False, e))
+                break
+            if not self._put(item):
+                break
+        self._put((True, self._DONE))
+
+    def _put(self, item) -> bool:
+        """Blocking put that gives up when the consumer called close()."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def start(self) -> "SourcePrefetcher":
+        if not self._started:
+            self._started = True
+            self._thread.start()
+        return self
+
+    def get(self):
+        """Next loaded scan, blocking until the worker has it. Raises
+        PrefetchError when that scan's load failed, StopIteration when all
+        jobs are consumed."""
+        self.start()
+        ok, item = self._q.get()
+        if not ok:
+            raise PrefetchError(
+                f"background projection load failed: {item}") from item
+        if item is self._DONE:
+            raise StopIteration
+        return item
+
+    def __iter__(self):
+        self.start()
+        while True:
+            try:
+                yield self.get()
+            except StopIteration:
+                return
+
+    def close(self) -> None:
+        """Stop loading; pending jobs are abandoned (no partial results are
+        handed out)."""
+        self._stop.set()
+        if self._started:
+            self._thread.join(timeout=5.0)
+
+
+class AsyncWriteback:
+    """Write-behind executor for VolumeSink stores.
+
+    `submit(sink, volume)` returns immediately after handing the finished
+    (device) volume to a single-worker executor; the device->host transfer
+    and the shard-per-file write happen off the compute thread, so scan
+    k-1's store overlaps scan k's dispatch. Writes run in submission order
+    (one worker). `pending` is bounded: submit blocks once more than
+    `max_pending` volumes are in flight, so host memory stays bounded under
+    a fast producer. `drain()` joins and re-raises the FIRST failed write
+    (a serving loop must not ack scans whose stores failed silently).
+    """
+
+    def __init__(self, max_pending: int = 2):
+        if max_pending < 1:
+            raise ValueError(f"max_pending={max_pending} must be >= 1")
+        self._max_pending = max_pending
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="volume-writeback")
+        self._futures: List[Future] = []
+        self._lock = threading.Lock()
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(not f.done() for f in self._futures)
+
+    def submit(self, sink: VolumeSink, volume,
+               layout: Optional[dict] = None) -> Future:
+        """Queue `sink.write(volume, layout=)`; blocks only when the
+        write-behind queue is full (backpressure, not fire-and-forget)."""
+        while self.pending >= self._max_pending:
+            # Wait on the oldest unfinished write (ordered single worker).
+            with self._lock:
+                oldest = next((f for f in self._futures if not f.done()),
+                              None)
+            if oldest is None:
+                break
+            try:
+                oldest.result()
+            except BaseException:
+                pass  # surfaced by drain(); keep the queue moving
+        fut = self._pool.submit(sink.write, volume, layout=layout)
+        with self._lock:
+            self._futures.append(fut)
+        return fut
+
+    def drain(self) -> int:
+        """Wait for every queued write; returns how many completed OK and
+        re-raises the first failure (subsequent writes still ran — the
+        single worker never cancels queued work)."""
+        with self._lock:
+            futures, self._futures = self._futures, []
+        first_err = None
+        done = 0
+        for f in futures:
+            try:
+                f.result()
+                done += 1
+            except BaseException as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+        return done
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)

@@ -13,7 +13,8 @@ The search space is the cross-product the plan layer exposes:
              merit is latency (cost.time_from_last_delta), which the
              throughput ranking below does not capture.
   reduce     psum | scatter | scatter_bf16 (half-width compensated scatter)
-  precision  fp32 | bf16 | fp16 | fp8_e4m3 (quarter-width + scale sidecar)
+  precision  fp32 | bf16 | fp16 | fp8_e4m3 | fp8_e5m2 (quarter-width +
+             scale sidecar; e5m2 trades one mantissa bit for range)
   impl       factorized | kernel (| reference)
 
 Candidates that violate the pipeline's divisibility rules are skipped (for
@@ -44,7 +45,10 @@ _SCHEDULE_ORDER = ("fused", "pipelined", "chunked")
 # Ranking knows every schedule, including the pin-only streaming one.
 _RANK_SCHEDULE_ORDER = _SCHEDULE_ORDER + ("incremental",)
 _REDUCE_ORDER = ("psum", "scatter", "scatter_bf16")
-_PRECISION_ORDER = ("fp32", "bf16", "fp16", "fp8_e4m3")
+# Tie-break order within equal wire width: e4m3 before e5m2 (one extra
+# mantissa bit ~= 6 dB PSNR at the same bytes; e5m2 wins only when pinned
+# for its exponent range).
+_PRECISION_ORDER = ("fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2")
 
 DEFAULT_N_STEPS = (1, 2, 4, 8)
 DEFAULT_Y_CHUNKS = (2, 4, 8, 16)

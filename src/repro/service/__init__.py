@@ -1,0 +1,40 @@
+"""Reconstruction-as-a-service (DESIGN.md §Serving).
+
+The paper solves ONE scan fast; production CT is a *stream* of scans
+hitting a fixed fleet. This package is the request layer that turns the
+staged engine (core/plan.py) into a throughput machine:
+
+  * scan queue + admission control — requests are rejected up front when
+    their footprint cannot fit the memory budget (planner/feasibility) or
+    the queue is full (backpressure), never half-served;
+  * geometry-bucketed batching — same-family scans (identical geometry,
+    mesh, plan pins) are padded to power-of-two buckets and reconstructed
+    by ONE vmapped dispatch (`ReconstructionPlan.build_batched`), bit-exact
+    per scan vs the single-scan engine;
+  * plan cache — planner search (`plan_from_spec(g, "auto")`) runs once
+    per scan family, not per request; hit/miss/search counters are the
+    service's proof of amortization;
+  * async I/O overlap — PFS reads prefetch ahead (SourcePrefetcher) and
+    volume stores write behind (AsyncWriteback), so scan k+1's loads and
+    scan k-1's writes overlap scan k's compute.
+
+    svc = ReconstructionService(mesh)
+    t1 = svc.submit(projections=p1, geometry=g)
+    t2 = svc.submit(source=src2, geometry=g, sink=sink2)
+    svc.drain()                      # bucket, batch, reconstruct, store
+    volume = t1.volume
+    svc.stats()["plan_cache"]        # {"searches": 1, "hits": 1, ...}
+
+Throughput figure of merit: scans/hour at fixed fleet
+(benchmarks/bench_serving.py, persisted as BENCH_serving.json).
+"""
+from .requests import (  # noqa: F401
+    AdmissionError, QueueFullError, ScanFamily, ScanTicket, TicketState,
+)
+from .plan_cache import PlanCache  # noqa: F401
+from .scheduler import ReconstructionService  # noqa: F401
+
+__all__ = [
+    "AdmissionError", "QueueFullError", "ScanFamily", "ScanTicket",
+    "TicketState", "PlanCache", "ReconstructionService",
+]

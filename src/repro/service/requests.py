@@ -1,0 +1,104 @@
+"""Scan requests, families, and tickets — the service's data model.
+
+A **family** is the bucketing identity: two requests may share one batched
+engine dispatch iff their (geometry, mesh, plan pins) triples are equal —
+that triple determines the plan the planner would pick, the engine trace,
+and every array shape in the pipeline. It is also the plan-cache key
+(plan_cache.py), so "same family" and "planner search already paid" are
+the same statement.
+
+A **ticket** is the caller's handle on one submitted scan: its lifecycle
+(QUEUED -> BATCHED -> DONE | FAILED; REJECTED never enters the queue), the
+reconstructed volume once served, and the error if its bucket failed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from repro.core.geometry import CBCTGeometry
+
+
+class AdmissionError(ValueError):
+    """The request was REJECTED at submit time — footprint over the memory
+    budget (planner/feasibility said no plan point fits) or malformed. The
+    scan never enters the queue; nothing was partially served."""
+
+
+class QueueFullError(AdmissionError):
+    """Backpressure: the scan queue is at max_queue. Callers should retry
+    after a drain (or shed load) — queueing unboundedly would just move the
+    OOM from device memory to host memory."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanFamily:
+    """The bucketing identity + plan-cache key: (geometry, mesh, pins).
+
+    `pins` is the canonicalized (sorted key/value tuple) form of the
+    caller's planner pins (e.g. precision="bf16") — part of the identity
+    because pinned requests must not share a plan (or a bucket) with
+    unpinned ones.
+    """
+
+    geometry: CBCTGeometry
+    mesh: Optional[object]          # jax Mesh (hashable) or None
+    pins: tuple = ()
+
+    @staticmethod
+    def make(geometry: CBCTGeometry, mesh, pins: dict) -> "ScanFamily":
+        return ScanFamily(geometry=geometry, mesh=mesh,
+                          pins=tuple(sorted((pins or {}).items())))
+
+    def pins_dict(self) -> dict:
+        return dict(self.pins)
+
+
+class TicketState(enum.Enum):
+    QUEUED = "queued"       # admitted, waiting for a drain
+    BATCHED = "batched"     # assigned to a bucket this drain
+    DONE = "done"           # volume ready (and stored, if a sink was given)
+    FAILED = "failed"       # its bucket's dispatch or store raised
+
+
+@dataclasses.dataclass
+class ScanTicket:
+    """One submitted scan's handle. `volume` is the engine's per-scan
+    output (sharded like the single-scan engine's); `error` holds the
+    exception when state is FAILED."""
+
+    scan_id: str
+    family: ScanFamily
+    state: TicketState = TicketState.QUEUED
+    volume: Optional[object] = None
+    error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state is TicketState.DONE
+
+    def result(self):
+        """The reconstructed volume; raises the bucket's error for FAILED
+        tickets and RuntimeError when the scan has not been served yet."""
+        if self.state is TicketState.FAILED:
+            raise RuntimeError(
+                f"scan {self.scan_id!r} failed to reconstruct"
+            ) from self.error
+        if self.state is not TicketState.DONE:
+            raise RuntimeError(
+                f"scan {self.scan_id!r} is {self.state.value}; call "
+                "ReconstructionService.drain() to serve queued scans")
+        return self.volume
+
+
+@dataclasses.dataclass
+class _QueuedScan:
+    """Internal queue entry: the ticket plus how to obtain its projections
+    (exactly one of `projections` / `source` is set) and where to store the
+    result (optional sink)."""
+
+    ticket: ScanTicket
+    projections: Optional[object] = None
+    source: Optional[object] = None          # io.streams.ProjectionSource
+    sink: Optional[object] = None            # io.streams.VolumeSink

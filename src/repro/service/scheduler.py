@@ -1,0 +1,282 @@
+"""The service scheduler: queue -> admission -> buckets -> batched engine.
+
+Bucketing rules (DESIGN.md §Serving):
+
+  * Only same-FAMILY scans share a bucket (requests.ScanFamily — identical
+    geometry, mesh and plan pins; the batched engine vmaps over scans, so
+    every lane must share one trace and one plan).
+  * Bucket sizes are powers of two, capped by `max_batch` AND by the
+    memory budget: the largest b with b * footprint(plan) <= hbm_bytes
+    (planner/feasibility prices one scan's per-rank footprint; the batched
+    engine replicates it per lane). Power-of-two buckets bound the number
+    of distinct compiled batch engines at log2(max_batch) per family.
+  * A partial bucket is padded with zero scans; padding lanes are dropped
+    from the output. The batched engine is bit-exact per lane
+    (core/plan.py build_batched), so padding cannot perturb real scans.
+
+I/O overlap: all admitted scans' projection loads run on a prefetch thread
+(double-buffered — scan k+1 loads while scan k computes) and finished
+volumes are written behind (AsyncWriteback) while the next bucket runs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import CBCTGeometry
+from repro.io.streams import AsyncWriteback, SourcePrefetcher
+
+from .plan_cache import PlanCache
+from .requests import (
+    AdmissionError, QueueFullError, ScanFamily, ScanTicket, TicketState,
+    _QueuedScan,
+)
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ReconstructionService:
+    """Multi-scan reconstruction front end over one device fleet (mesh).
+
+    mesh         : the fixed fleet every scan is served on (None = single
+                   device). Part of every scan family.
+    spec         : plan spec families resolve through ("auto" = planner
+                   search, once per family — see PlanCache).
+    max_batch    : bucket-size ceiling (power of two recommended).
+    max_queue    : admission bound on queued scans (QueueFullError beyond).
+    hbm_bytes    : per-device memory budget for admission + bucket sizing.
+    """
+
+    def __init__(self, mesh=None, *, spec: str = "auto", max_batch: int = 8,
+                 max_queue: int = 64, hbm_bytes: Optional[int] = None,
+                 vmem_budget: Optional[int] = None,
+                 plan_cache_capacity: int = 32, prefetch_depth: int = 2,
+                 writeback_depth: int = 2):
+        from repro.planner import DEFAULT_HBM_BYTES
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch} must be >= 1")
+        self.mesh = mesh
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.hbm_bytes = DEFAULT_HBM_BYTES if hbm_bytes is None else hbm_bytes
+        self.vmem_budget = vmem_budget
+        self.prefetch_depth = prefetch_depth
+        self.plan_cache = PlanCache(capacity=plan_cache_capacity, spec=spec)
+        self._writeback = AsyncWriteback(max_pending=writeback_depth)
+        self._queue: List[_QueuedScan] = []
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._counters = {
+            "submitted": 0, "rejected": 0, "served": 0, "failed": 0,
+            "buckets": 0, "padded_lanes": 0, "prefetched_loads": 0,
+            "writebacks": 0,
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def _admit(self, family: ScanFamily):
+        """Resolve the family's plan (cached) and check one scan's
+        footprint against the budget — the reject half of admission; the
+        queue bound is the backpressure half."""
+        plan = self.plan_cache.resolve(family)
+        from repro.planner import check_feasible, point_from_plan
+        ok, reason = check_feasible(family.geometry, point_from_plan(plan),
+                                    self.hbm_bytes, self.vmem_budget)
+        if not ok:
+            raise AdmissionError(
+                f"scan rejected: plan [{plan.describe()}] does not fit the "
+                f"budget ({self.hbm_bytes / 2**30:.2f} GiB HBM): {reason}")
+        return plan
+
+    def submit(self, projections=None, *, geometry: CBCTGeometry,
+               source=None, sink=None, scan_id: Optional[str] = None,
+               **pins) -> ScanTicket:
+        """Admit one scan. Exactly one of `projections` (in-memory
+        (N_p, N_v, N_u) array) / `source` (ProjectionSource, loaded by the
+        prefetch thread at drain time) carries the data; `sink`
+        (VolumeSink) enables write-behind store of the result. `pins` are
+        planner pins (precision=..., schedule=...) and widen the scan's
+        family. Returns the scan's ticket; raises AdmissionError /
+        QueueFullError instead of queueing work that cannot be served."""
+        if (projections is None) == (source is None):
+            raise AdmissionError(
+                "pass exactly one of projections= (in-memory scan) or "
+                "source= (ProjectionSource to prefetch from)")
+        if projections is not None:
+            want = (geometry.n_proj, geometry.n_v, geometry.n_u)
+            if tuple(projections.shape) != want:
+                raise AdmissionError(
+                    f"projections shape {tuple(projections.shape)} does not "
+                    f"match the declared geometry {want}")
+        family = ScanFamily.make(geometry, self.mesh, pins)
+        self._admit(family)   # raises AdmissionError on footprint
+        with self._lock:
+            if len(self._queue) >= self.max_queue:
+                self._counters["rejected"] += 1
+                raise QueueFullError(
+                    f"scan queue is full ({self.max_queue}); drain() or "
+                    "shed load")
+            self._seq += 1
+            ticket = ScanTicket(
+                scan_id=scan_id or f"scan-{self._seq}", family=family)
+            self._queue.append(_QueuedScan(ticket=ticket,
+                                           projections=projections,
+                                           source=source, sink=sink))
+            self._counters["submitted"] += 1
+        return ticket
+
+    @property
+    def queued(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- bucketing -----------------------------------------------------------
+
+    def _bucket_capacity(self, family: ScanFamily, plan) -> int:
+        """Largest power-of-two batch the budget admits for this family
+        (>= 1: single-scan feasibility was checked at admission)."""
+        from repro.planner import plan_footprint, point_from_plan
+        fp = plan_footprint(family.geometry, point_from_plan(plan))
+        per_scan = max(1, fp.total)
+        cap = 1
+        while (cap * 2 <= self.max_batch
+               and (cap * 2) * per_scan <= self.hbm_bytes):
+            cap *= 2
+        return cap
+
+    def _make_buckets(self) -> List[Tuple[ScanFamily, List[_QueuedScan], int]]:
+        """Drain the queue into (family, scans, batch_size) buckets,
+        preserving submission order within each family."""
+        with self._lock:
+            pending, self._queue = self._queue, []
+        by_family: Dict[ScanFamily, List[_QueuedScan]] = {}
+        order: List[ScanFamily] = []
+        for item in pending:
+            fam = item.ticket.family
+            if fam not in by_family:
+                by_family[fam] = []
+                order.append(fam)
+            by_family[fam].append(item)
+        buckets = []
+        for fam in order:
+            plan = self.plan_cache.resolve(fam)
+            cap = self._bucket_capacity(fam, plan)
+            scans = by_family[fam]
+            for i in range(0, len(scans), cap):
+                chunk = scans[i:i + cap]
+                buckets.append((fam, chunk, _next_pow2(len(chunk))))
+        return buckets
+
+    # -- serving -------------------------------------------------------------
+
+    def _load_jobs(self, buckets):
+        """One prefetch job per admitted scan, in processing order: PFS
+        sources scatter-read + decode on the worker thread; in-memory scans
+        pass through untouched."""
+        jobs = []
+        for _fam, scans, _bsz in buckets:
+            for item in scans:
+                if item.source is not None:
+                    jobs.append(
+                        lambda s=item.source: s.load(self.mesh))
+                else:
+                    jobs.append(lambda p=item.projections: p)
+        return jobs
+
+    def drain(self) -> List[ScanTicket]:
+        """Serve every queued scan: bucket by family, reconstruct each
+        bucket in one batched dispatch, store sink-ed results write-behind.
+        Returns the tickets served this drain (DONE or FAILED — a failed
+        bucket fails only its own tickets)."""
+        buckets = self._make_buckets()
+        if not buckets:
+            return []
+        from repro.core.distributed import SCATTER_REDUCES, \
+            batched_input_sharding
+        prefetch = SourcePrefetcher(self._load_jobs(buckets),
+                                    depth=self.prefetch_depth).start()
+        served: List[ScanTicket] = []
+        writes: List[Tuple[ScanTicket, object]] = []
+        try:
+            for fam, scans, bsz in buckets:
+                tickets = [s.ticket for s in scans]
+                for t in tickets:
+                    t.state = TicketState.BATCHED
+                try:
+                    g = fam.geometry
+                    plan = self.plan_cache.resolve(fam)
+                    engine = plan.build_batched(bsz)
+                    lanes = [jnp.asarray(prefetch.get()) for _ in scans]
+                    self._counters["prefetched_loads"] += sum(
+                        1 for s in scans if s.source is not None)
+                    n_pad = bsz - len(lanes)
+                    if n_pad:
+                        pad = jnp.zeros((g.n_proj, g.n_v, g.n_u),
+                                        jnp.float32)
+                        lanes.extend([pad] * n_pad)
+                        self._counters["padded_lanes"] += n_pad
+                    batch = jnp.stack(lanes)
+                    if self.mesh is not None:
+                        batch = jax.device_put(
+                            batch, batched_input_sharding(self.mesh))
+                    out = engine(batch)
+                    layout = None
+                    if (plan.schedule == "chunked"
+                            and plan.reduce in SCATTER_REDUCES):
+                        layout = {"kind": "y_chunk_major",
+                                  "y_chunks": plan.y_chunks}
+                    self._counters["buckets"] += 1
+                    for i, item in enumerate(scans):
+                        vol = out[i]
+                        item.ticket.volume = vol
+                        item.ticket.state = TicketState.DONE
+                        self._counters["served"] += 1
+                        if item.sink is not None:
+                            writes.append((
+                                item.ticket,
+                                self._writeback.submit(item.sink, vol,
+                                                       layout=layout)))
+                            self._counters["writebacks"] += 1
+                except BaseException as e:
+                    for item in scans:
+                        item.ticket.state = TicketState.FAILED
+                        item.ticket.error = e
+                        self._counters["failed"] += 1
+                served.extend(tickets)
+        finally:
+            prefetch.close()
+        # Join write-behind stores; a failed write fails ITS ticket only.
+        for ticket, fut in writes:
+            try:
+                fut.result()
+            except BaseException as e:
+                ticket.state = TicketState.FAILED
+                ticket.error = e
+                self._counters["served"] -= 1
+                self._counters["failed"] += 1
+        return served
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters + cache stats. `plan_cache.searches` staying flat while
+        `submitted` grows is the amortization proof (one planner search per
+        scan family); `engine_cache` covers the jitted batched engines."""
+        from repro.core.plan import engine_cache_stats
+        with self._lock:
+            counters = dict(self._counters)
+            counters["queued"] = len(self._queue)
+        counters["plan_cache"] = self.plan_cache.stats()
+        counters["engine_cache"] = engine_cache_stats()
+        return counters
+
+    def close(self) -> None:
+        self._writeback.close()

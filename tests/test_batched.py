@@ -1,0 +1,155 @@
+"""`ReconstructionPlan.build_batched` — the service's bucketed engine.
+
+The contract under test is BIT-exactness: lane i of the vmapped batched
+engine must produce byte-identical output to the single-scan engine on
+scan i, for every (schedule, impl, codec) the plan space offers. The
+engine earns this two ways (core/plan.py):
+
+  * filter + encode are hoisted OUT of the vmap (the batch is flattened
+    into the projection axis — legal because filtering is per-projection
+    independent), which also sidesteps the XLA CPU bug where a collective
+    after an FFT under vmap(shard_map) poisons the FFT operand layout;
+  * the back-projectors pin their coordinate chains behind an
+    optimization_barrier so batched and unbatched compilations contract
+    the same FMAs (core/backprojection.py).
+
+Padding is the other half of the bucketing story: a junk lane (even one
+full of NaNs) must not perturb the real lanes' bits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import batched_input_sharding, input_sharding
+from repro.core.geometry import default_geometry
+from repro.core.phantom import forward_project
+from repro.core.plan import (
+    ReconstructionPlan, clear_engine_cache, engine_cache_stats,
+)
+from repro.parallel.mesh import make_mesh
+
+IMPLS = ("reference", "factorized", "kernel")
+CODECS = ("fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2")
+
+
+@pytest.fixture(scope="module")
+def case16():
+    g = default_geometry(16, n_proj=8)
+    base = np.asarray(forward_project(g))
+    rng = np.random.default_rng(7)
+    scans = np.stack([
+        base,
+        base * 1.5,
+        rng.standard_normal(base.shape).astype(np.float32),
+    ])
+    return g, scans
+
+
+def _mesh():
+    return make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+def _assert_lanes_bitexact(plan, scans, mesh):
+    single = plan.build()
+    batched = plan.build_batched(scans.shape[0])
+    if mesh is None:
+        out = batched(scans)
+        refs = [single(s) for s in scans]
+    else:
+        out = batched(jax.device_put(jnp.asarray(scans),
+                                     batched_input_sharding(mesh)))
+        refs = [single(jax.device_put(jnp.asarray(s), input_sharding(mesh)))
+                for s in scans]
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(
+            np.asarray(out[i]), np.asarray(ref),
+            err_msg=f"lane {i} not bit-equal to the single-scan engine")
+
+
+class TestBitExactness:
+    @pytest.mark.parametrize("codec", CODECS)
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_impl_codec_cross_product(self, case16, impl, codec):
+        g, scans = case16
+        plan = ReconstructionPlan(geometry=g, mesh=_mesh(), impl=impl,
+                                  precision=codec)
+        _assert_lanes_bitexact(plan, scans, plan.mesh)
+
+    @pytest.mark.parametrize("schedule", ("fused", "pipelined", "chunked"))
+    def test_schedules(self, case16, schedule):
+        g, scans = case16
+        kw = ({} if schedule == "fused" else
+              {"n_steps": 2} if schedule == "pipelined" else
+              {"n_steps": 2, "y_chunks": 4})
+        plan = ReconstructionPlan(geometry=g, mesh=_mesh(),
+                                  schedule=schedule, **kw)
+        _assert_lanes_bitexact(plan, scans, plan.mesh)
+
+    @pytest.mark.parametrize("schedule", ("fused", "pipelined"))
+    def test_no_mesh(self, case16, schedule):
+        """mesh=None batched path (the CPU bench / single-host service)."""
+        g, scans = case16
+        kw = {} if schedule == "fused" else {"n_steps": 2}
+        plan = ReconstructionPlan(geometry=g, schedule=schedule, **kw)
+        _assert_lanes_bitexact(plan, scans, None)
+
+    def test_scatter_reduce(self, case16):
+        g, scans = case16
+        plan = ReconstructionPlan(geometry=g, mesh=_mesh(),
+                                  reduce="scatter")
+        _assert_lanes_bitexact(plan, scans, plan.mesh)
+
+
+class TestPadding:
+    def test_junk_lane_cannot_perturb_real_lanes(self, case16):
+        """The padded-bucket guarantee: real lanes are bit-identical
+        whether the pad lane holds zeros, 1e30s, or NaNs — vmap lanes
+        share no data."""
+        g, scans = case16
+        plan = ReconstructionPlan(geometry=g, mesh=_mesh())
+        batched = plan.build_batched(4)
+        sh = batched_input_sharding(plan.mesh)
+        pads = [np.zeros_like(scans[0]),
+                np.full_like(scans[0], 1e30),
+                np.full_like(scans[0], np.nan)]
+        outs = []
+        for pad in pads:
+            batch = jnp.asarray(np.concatenate([scans, pad[None]]))
+            outs.append(np.asarray(batched(jax.device_put(batch, sh))))
+        for other in outs[1:]:
+            np.testing.assert_array_equal(outs[0][:3], other[:3])
+
+    def test_nan_pad_stays_in_its_lane(self, case16):
+        g, scans = case16
+        plan = ReconstructionPlan(geometry=g)
+        batch = np.concatenate(
+            [scans, np.full_like(scans[0], np.nan)[None]])
+        out = np.asarray(plan.build_batched(4)(jnp.asarray(batch)))
+        assert np.all(np.isfinite(out[:3]))
+        assert np.all(np.isnan(out[3]))
+
+
+class TestBatchedEngineContract:
+    def test_incremental_schedule_rejected(self, case16):
+        g, _ = case16
+        plan = ReconstructionPlan(geometry=g, schedule="incremental",
+                                  n_steps=2)
+        with pytest.raises(ValueError, match="incremental"):
+            plan.build_batched(2)
+
+    def test_batch_size_validated(self, case16):
+        g, _ = case16
+        with pytest.raises(ValueError):
+            ReconstructionPlan(geometry=g).build_batched(0)
+
+    def test_batched_engines_are_cached_per_batch_size(self, case16):
+        g, _ = case16
+        clear_engine_cache()
+        plan = ReconstructionPlan(geometry=g)
+        a = plan.build_batched(2)
+        assert plan.build_batched(2) is a          # hit
+        assert plan.build_batched(4) is not a      # different key
+        assert plan.build() is not a               # single-scan key distinct
+        stats = engine_cache_stats()
+        assert stats["hits"] >= 1 and stats["misses"] >= 3

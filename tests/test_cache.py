@@ -1,0 +1,115 @@
+"""CountingLRU (core/cache.py) and the engine-cache regression it fixes:
+`_ENGINE_CACHE` used to be an unbounded dict with a bare try/except around
+the lookup — every distinct plan leaked a compiled engine forever and
+nothing recorded hit rates. The bounded LRU is shared by the plan-level
+engine cache and the service's plan cache."""
+import pytest
+
+from repro.core.cache import CountingLRU
+from repro.core.geometry import default_geometry
+from repro.core.plan import (
+    ReconstructionPlan, clear_engine_cache, engine_cache_stats,
+)
+
+
+class TestCountingLRU:
+    def test_hit_miss_counters(self):
+        c = CountingLRU(4)
+        assert c.get("a") is None
+        c.put("a", 1)
+        assert c.get("a") == 1
+        s = c.stats()
+        assert s["hits"] == 1 and s["misses"] == 1 and s["size"] == 1
+
+    def test_eviction_is_lru_not_fifo(self):
+        c = CountingLRU(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1          # touch a -> b is now least recent
+        c.put("c", 3)                   # evicts b
+        assert "b" not in c and "a" in c and "c" in c
+        assert c.stats()["evictions"] == 1
+
+    def test_capacity_bounds_size(self):
+        c = CountingLRU(8)
+        for k in range(100):
+            c.put(k, k)
+        assert len(c) == 8
+        assert c.stats()["evictions"] == 92
+        assert list(c.keys()) == list(range(92, 100))
+
+    def test_put_existing_refreshes(self):
+        c = CountingLRU(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.put("a", 10)                  # refresh, not duplicate
+        c.put("c", 3)                   # evicts b, not a
+        assert c.get("a") == 10 and "b" not in c
+
+    def test_get_or_build_builds_once(self):
+        c = CountingLRU(4)
+        calls = []
+
+        def build():
+            calls.append(1)
+            return "v"
+        assert c.get_or_build("k", build) == "v"
+        assert c.get_or_build("k", build) == "v"
+        assert len(calls) == 1
+        assert c.stats()["hits"] == 1 and c.stats()["misses"] == 1
+
+    def test_unhashable_key_builds_uncached(self):
+        """The regression: an unhashable key must neither crash nor cache —
+        and the event is COUNTED, not swallowed by a bare except."""
+        c = CountingLRU(4)
+        calls = []
+
+        def build():
+            calls.append(1)
+            return len(calls)
+        key = {"not": "hashable"}
+        assert c.get_or_build(key, build) == 1
+        assert c.get_or_build(key, build) == 2     # rebuilt every time
+        assert len(c) == 0
+        assert c.stats()["unhashable"] == 2
+        assert c.get(["also unhashable"]) is None
+
+    def test_zero_capacity_disables_storage(self):
+        c = CountingLRU(0)
+        c.put("a", 1)
+        assert c.get("a") is None and len(c) == 0
+
+    def test_clear_keeps_or_resets_counters(self):
+        c = CountingLRU(4)
+        c.put("a", 1)
+        c.get("a")
+        c.clear()
+        assert len(c) == 0 and c.stats()["hits"] == 1
+        c.clear(reset_counters=True)
+        assert c.stats()["hits"] == 0
+
+
+class TestEngineCacheRegression:
+    def test_rebuild_is_a_hit(self):
+        g = default_geometry(16, n_proj=8)
+        clear_engine_cache()
+        plan = ReconstructionPlan(geometry=g)
+        a = plan.build()
+        h0 = engine_cache_stats()["hits"]
+        assert plan.build() is a
+        assert engine_cache_stats()["hits"] == h0 + 1
+
+    def test_engine_cache_is_bounded(self):
+        """Distinct plans can no longer grow the cache without bound: the
+        LRU evicts and the engine is simply rebuilt on the next call."""
+        clear_engine_cache()
+        cap = engine_cache_stats()["capacity"]
+        assert cap > 0
+        g = default_geometry(16, n_proj=8)
+        # distinct plan identities: vary a harmless knob past capacity
+        plans = [ReconstructionPlan(geometry=g, schedule="pipelined",
+                                    n_steps=2, precision=p)
+                 for p in ("fp32", "bf16", "fp16")]
+        for plan in plans:
+            plan.build()
+        assert engine_cache_stats()["size"] <= cap

@@ -271,9 +271,11 @@ class TestSearch:
                              schedules=("fused", "chunked"), top_k=4)
         assert props and props[0].point.schedule == "chunked"
         assert all(p.point.schedule != "fused" for p in props)
-        # and the fused plan really was pruned as infeasible, not absent:
+        # and the fused plan really was pruned as infeasible, not absent
+        # (top_k must cover the whole space — 170 points since the
+        # precision axis grew to five codecs):
         with_inf = search_plans(g, None, hbm_bytes=budget,
-                                schedules=("fused", "chunked"), top_k=100,
+                                schedules=("fused", "chunked"), top_k=1000,
                                 include_infeasible=True)
         fused = [p for p in with_inf if p.point.schedule == "fused"]
         assert fused and not fused[0].feasible

@@ -83,6 +83,12 @@ class TestPrecisionPolicy:
             assert Precision(alias).storage == "fp8_e4m3"
         assert Precision("fp8_e4m3").storage_dtype == jnp.float8_e4m3fn
         assert Precision("fp8_e4m3").storage_bytes == 1
+        for alias in ("e5m2", "float8_e5m2"):
+            assert Precision(alias).storage == "fp8_e5m2"
+        assert Precision("fp8_e5m2").storage_dtype == jnp.float8_e5m2
+        assert Precision("fp8_e5m2").storage_bytes == 1
+        # two mantissa bits vs three: e5m2 quantizes twice as coarsely
+        assert Precision("fp8_e5m2").eps() == 2 * Precision("fp8_e4m3").eps()
 
 
 class TestStreamCodecs:
@@ -96,7 +102,8 @@ class TestStreamCodecs:
                                      out_dtype=jnp.float32)
 
     def test_registry(self):
-        assert set(CODECS) == {"fp32", "bf16", "fp16", "fp8_e4m3"}
+        assert set(CODECS) == {"fp32", "bf16", "fp16", "fp8_e4m3",
+                               "fp8_e5m2"}
         for name, codec in CODECS.items():
             assert codec is codec_for(name)
             assert codec is Precision(name).codec
@@ -106,6 +113,7 @@ class TestStreamCodecs:
         assert not CODECS["bf16"].has_scales
         assert CODECS["fp16"].has_scales      # scale-on-overflow
         assert CODECS["fp8_e4m3"].has_scales  # normalizing
+        assert CODECS["fp8_e5m2"].has_scales  # normalizing
 
     def test_scale_free_encode_bitmatches_cast(self, q32):
         """bf16 (and f32) codecs are byte-identical to the historical
@@ -150,6 +158,20 @@ class TestStreamCodecs:
         amax = jnp.max(jnp.abs(q.astype(jnp.float32)), axis=(-2, -1))
         per_proj = jnp.max(jnp.abs(dec - q), axis=(-2, -1)) / amax
         assert float(jnp.max(per_proj)) <= 0.5 * Precision("fp8_e4m3").eps()
+
+    def test_fp8_e5m2_roundtrip_error_bound(self, q32):
+        """Same normalizing contract as e4m3 at e5m2's coarser eps — and a
+        wider exponent: the normalized stream never needs the sidecar to
+        rescue range, only precision."""
+        _, q = q32
+        codec = CODECS["fp8_e5m2"]
+        data, scales = codec.encode(q)
+        assert data.dtype == jnp.float8_e5m2
+        assert scales.shape == (q.shape[0],) and scales.dtype == jnp.float32
+        dec = codec.decode(data, scales)
+        amax = jnp.max(jnp.abs(q.astype(jnp.float32)), axis=(-2, -1))
+        per_proj = jnp.max(jnp.abs(dec - q), axis=(-2, -1)) / amax
+        assert float(jnp.max(per_proj)) <= 0.5 * Precision("fp8_e5m2").eps()
 
     def test_fp8_zero_projection_is_exact(self):
         codec = CODECS["fp8_e4m3"]
@@ -304,14 +326,17 @@ class TestQuantizationStudy:
     """ISSUE 5 satellite: PSNR sweep of the codec ladder against the f32
     Shepp-Logan oracle (the f32 reconstruction, 16^3 / 24 views).
 
-    Measured on this geometry: bf16 ~76 dB, fp16 ~94 dB, fp8_e4m3 ~52 dB.
-    FP8_FLOOR_DB is the documented fp8 regression floor (a few dB under the
-    measured value, the same convention as TestGoldenPSNR.FLOOR_DB); the
-    ordering assertion pins the physics: narrower storage can only lose
-    fidelity — fp32 >= bf16 >= fp8.
+    Measured on this geometry: bf16 ~76 dB, fp16 ~94 dB, fp8_e4m3 ~52 dB,
+    fp8_e5m2 ~46 dB (the ~6 dB cost of trading a mantissa bit for
+    exponent range). Each *_FLOOR_DB is the documented regression floor (a
+    few dB under the measured value, the same convention as
+    TestGoldenPSNR.FLOOR_DB); the ordering assertion pins the physics:
+    narrower mantissa can only lose fidelity — fp32 >= bf16 >= e4m3 >=
+    e5m2 on a normalized (in-range) stream.
     """
 
     FP8_FLOOR_DB = 48.0
+    E5M2_FLOOR_DB = 42.0
     BF16_FLOOR_DB = 70.0
 
     @pytest.fixture(scope="class")
@@ -321,7 +346,7 @@ class TestQuantizationStudy:
         mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
         oracle = np.asarray(ReconstructionPlan(geometry=g).build()(proj))
         vols = {}
-        for storage in ("fp32", "bf16", "fp8_e4m3"):
+        for storage in ("fp32", "bf16", "fp8_e4m3", "fp8_e5m2"):
             # the 1x1x1-mesh engine: the fp8 acceptance path of ISSUE 5
             plan = ReconstructionPlan(geometry=g, mesh=mesh,
                                       precision=storage)
@@ -332,12 +357,18 @@ class TestQuantizationStudy:
     def test_psnr_ordering(self, sweep):
         oracle, vols = sweep
         db = {s: psnr(v, oracle) for s, v in vols.items()}
-        assert db["fp32"] >= db["bf16"] >= db["fp8_e4m3"], db
+        assert (db["fp32"] >= db["bf16"] >= db["fp8_e4m3"]
+                >= db["fp8_e5m2"]), db
 
     def test_fp8_engine_clears_documented_floor(self, sweep):
         oracle, vols = sweep
         got = psnr(vols["fp8_e4m3"], oracle)
         assert got > self.FP8_FLOOR_DB, f"fp8: {got:.2f} dB"
+
+    def test_fp8_e5m2_engine_clears_documented_floor(self, sweep):
+        oracle, vols = sweep
+        got = psnr(vols["fp8_e5m2"], oracle)
+        assert got > self.E5M2_FLOOR_DB, f"e5m2: {got:.2f} dB"
 
     def test_bf16_engine_clears_documented_floor(self, sweep):
         oracle, vols = sweep

@@ -1,0 +1,297 @@
+"""Reconstruction-as-a-service (repro/service): admission, bucketing,
+plan-cache amortization, async I/O overlap, and failure isolation.
+
+This file doubles as the CI fast-tier service smoke test (ci.yml), so it
+stays on the 16^3 geometry and the 1x1x1 mesh.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.geometry import default_geometry
+from repro.core.plan import clear_engine_cache, plan_from_spec
+from repro.io import (
+    AsyncWriteback, PrefetchError, ProjectionSource, SourcePrefetcher,
+    VolumeSink,
+)
+from repro.parallel.mesh import make_mesh
+from repro.service import (
+    AdmissionError, QueueFullError, ReconstructionService, ScanFamily,
+    TicketState,
+)
+
+
+@pytest.fixture(scope="module")
+def case16():
+    from repro.core.phantom import forward_project
+    g = default_geometry(16, n_proj=8)
+    base = np.asarray(forward_project(g))
+    rng = np.random.default_rng(3)
+    scans = [jnp.asarray(base * (1.0 + 0.25 * k)
+                         + rng.standard_normal(base.shape).astype(np.float32)
+                         * 0.01)
+             for k in range(5)]
+    return g, scans
+
+
+def _mesh():
+    return make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+class TestServeAndBucket:
+    def test_drain_is_bitexact_vs_single_scan_engine(self, case16):
+        g, scans = case16
+        mesh = _mesh()
+        clear_engine_cache()
+        svc = ReconstructionService(mesh, max_batch=8)
+        tickets = [svc.submit(projections=p, geometry=g) for p in scans]
+        served = svc.drain()
+        assert [t.scan_id for t in served] == [t.scan_id for t in tickets]
+        assert all(t.state is TicketState.DONE for t in tickets)
+        ref = plan_from_spec(g, "auto", mesh=mesh).build()
+        for p, t in zip(scans, tickets):
+            np.testing.assert_array_equal(np.asarray(ref(p)),
+                                          np.asarray(t.result()))
+        st = svc.stats()
+        # 5 scans -> one bucket of 8 (next power of two), 3 pad lanes
+        assert st["buckets"] == 1 and st["padded_lanes"] == 3
+        assert st["served"] == 5 and st["queued"] == 0
+        svc.close()
+
+    def test_plan_cache_amortizes_planner_search(self, case16):
+        """ISSUE 7 acceptance: the second same-family request does ZERO
+        planner-search work — the searches counter stays at 1."""
+        g, scans = case16
+        svc = ReconstructionService(max_batch=4)
+        svc.submit(projections=scans[0], geometry=g)
+        svc.drain()
+        assert svc.stats()["plan_cache"]["searches"] == 1
+        svc.submit(projections=scans[1], geometry=g)
+        svc.drain()
+        st = svc.stats()
+        assert st["plan_cache"]["searches"] == 1      # no new search
+        assert st["plan_cache"]["hits"] >= 1
+        # a pinned request is a NEW family -> exactly one more search
+        svc.submit(projections=scans[2], geometry=g, precision="bf16")
+        svc.drain()
+        assert svc.stats()["plan_cache"]["searches"] == 2
+        svc.close()
+
+    def test_families_never_share_a_bucket(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(max_batch=8)
+        t1 = svc.submit(projections=scans[0], geometry=g)
+        t2 = svc.submit(projections=scans[1], geometry=g, precision="bf16")
+        svc.drain()
+        assert svc.stats()["buckets"] == 2
+        assert t1.family != t2.family
+        assert t1.done and t2.done
+        svc.close()
+
+    def test_max_batch_splits_buckets(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(max_batch=2)
+        for p in scans:                       # 5 scans, cap 2
+            svc.submit(projections=p, geometry=g)
+        tickets = svc.drain()
+        assert all(t.done for t in tickets)
+        st = svc.stats()
+        assert st["buckets"] == 3             # 2 + 2 + 1
+        # the trailing bucket of 1 runs at batch size 1 — no pad needed
+        assert st["padded_lanes"] == 0
+        svc.close()
+
+
+class TestAdmission:
+    def test_footprint_over_budget_rejected(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(hbm_bytes=1024)
+        with pytest.raises(AdmissionError, match="budget"):
+            svc.submit(projections=scans[0], geometry=g)
+        assert svc.queued == 0
+        svc.close()
+
+    def test_queue_full_backpressure(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(max_queue=1)
+        svc.submit(projections=scans[0], geometry=g)
+        with pytest.raises(QueueFullError):
+            svc.submit(projections=scans[1], geometry=g)
+        assert svc.queued == 1
+        svc.drain()
+        svc.submit(projections=scans[1], geometry=g)   # drained -> space
+        svc.close()
+
+    def test_shape_mismatch_rejected(self, case16):
+        g, _ = case16
+        svc = ReconstructionService()
+        with pytest.raises(AdmissionError, match="shape"):
+            svc.submit(projections=jnp.zeros((1, 2, 3)), geometry=g)
+        svc.close()
+
+    def test_exactly_one_data_source(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        with pytest.raises(AdmissionError, match="exactly one"):
+            svc.submit(geometry=g)
+        with pytest.raises(AdmissionError, match="exactly one"):
+            svc.submit(projections=scans[0], source=object(), geometry=g)
+        svc.close()
+
+    def test_result_before_drain_raises(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        t = svc.submit(projections=scans[0], geometry=g)
+        with pytest.raises(RuntimeError, match="queued"):
+            t.result()
+        svc.close()
+
+
+class TestAsyncIO:
+    def test_source_and_sink_roundtrip(self, case16, tmp_path):
+        """PFS-backed scan: projections prefetch-read from a shard store,
+        volume written behind to a sink, both byte-faithful."""
+        g, scans = case16
+        mesh = _mesh()
+        src = ProjectionSource.write(str(tmp_path / "scan"),
+                                     np.asarray(scans[0]))
+        sink = VolumeSink(str(tmp_path / "vol"))
+        svc = ReconstructionService(mesh)
+        t = svc.submit(source=src, geometry=g, sink=sink)
+        svc.drain()
+        assert t.done
+        ref = plan_from_spec(g, "auto", mesh=mesh).build()(scans[0])
+        np.testing.assert_array_equal(np.asarray(t.result()),
+                                      np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(sink.read()),
+                                      np.asarray(ref))
+        st = svc.stats()
+        assert st["prefetched_loads"] == 1 and st["writebacks"] == 1
+        svc.close()
+
+    def test_failed_writeback_fails_only_its_ticket(self, case16, tmp_path):
+        g, scans = case16
+
+        class ExplodingSink:
+            def write(self, volume, layout=None):
+                raise IOError("disk full")
+
+        svc = ReconstructionService()
+        ok = svc.submit(projections=scans[0], geometry=g,
+                        sink=VolumeSink(str(tmp_path / "ok")))
+        bad = svc.submit(projections=scans[1], geometry=g,
+                         sink=ExplodingSink())
+        svc.drain()
+        assert ok.state is TicketState.DONE
+        assert bad.state is TicketState.FAILED
+        with pytest.raises(RuntimeError, match="failed"):
+            bad.result()
+        assert isinstance(bad.error, IOError)
+        st = svc.stats()
+        assert st["failed"] == 1 and st["served"] == 1
+        svc.close()
+
+
+class TestPrefetcher:
+    def test_order_preserved(self):
+        """Jobs complete in submission order regardless of their cost —
+        the service pairs get() k with scan k by position."""
+        def slow():
+            time.sleep(0.05)
+            return "a"
+        pf = SourcePrefetcher([slow, lambda: "b", lambda: "c"],
+                              depth=2).start()
+        assert [pf.get(), pf.get(), pf.get()] == ["a", "b", "c"]
+        with pytest.raises(StopIteration):
+            pf.get()
+        pf.close()
+
+    def test_depth_bounds_readahead(self):
+        """Double-buffering, not slurping: at most `depth` loads sit in
+        memory before the consumer asks."""
+        started = []
+
+        def job(k):
+            def run():
+                started.append(k)
+                return k
+            return run
+        pf = SourcePrefetcher([job(k) for k in range(6)], depth=2).start()
+        deadline = time.monotonic() + 5.0
+        while len(started) < 3 and time.monotonic() < deadline:
+            time.sleep(0.005)   # fill: depth queued + 1 blocked in put
+        time.sleep(0.05)
+        assert len(started) <= 4
+        assert [pf.get() for _ in range(6)] == list(range(6))
+        pf.close()
+
+    def test_error_propagates_as_prefetch_error(self):
+        def boom():
+            raise IOError("bad shard")
+        pf = SourcePrefetcher([lambda: 1, boom, lambda: 3]).start()
+        assert pf.get() == 1
+        with pytest.raises(PrefetchError, match="bad shard"):
+            pf.get()
+        pf.close()
+
+
+class TestWriteback:
+    def test_drain_reraises_first_failure(self, tmp_path):
+        class Sink:
+            def __init__(self):
+                self.wrote = []
+
+            def write(self, volume, layout=None):
+                self.wrote.append(np.asarray(volume).copy())
+
+        class Bad:
+            def write(self, volume, layout=None):
+                raise IOError("enospc")
+
+        wb = AsyncWriteback(max_pending=2)
+        good = Sink()
+        wb.submit(good, jnp.ones((2, 2)))
+        wb.submit(Bad(), jnp.ones((2, 2)))
+        with pytest.raises(IOError, match="enospc"):
+            wb.drain()
+        assert len(good.wrote) == 1
+        wb.close()
+
+    def test_backpressure_blocks_at_max_pending(self):
+        release = threading.Event()
+
+        class SlowSink:
+            def write(self, volume, layout=None):
+                release.wait(5.0)
+
+        wb = AsyncWriteback(max_pending=1)
+        t0 = time.monotonic()
+        wb.submit(SlowSink(), jnp.ones((2,)))
+
+        def delayed_release():
+            time.sleep(0.1)
+            release.set()
+        threading.Thread(target=delayed_release, daemon=True).start()
+        wb.submit(SlowSink(), jnp.ones((2,)))   # must wait for slot
+        assert time.monotonic() - t0 >= 0.05
+        assert wb.drain() == 2
+        wb.close()
+
+
+class TestScanFamily:
+    def test_identity_is_geometry_mesh_pins(self, case16):
+        g, _ = case16
+        g2 = default_geometry(16, n_proj=24)
+        m = _mesh()
+        a = ScanFamily.make(g, m, {})
+        assert a == ScanFamily.make(g, m, {})
+        assert a != ScanFamily.make(g2, m, {})
+        assert a != ScanFamily.make(g, None, {})
+        assert a != ScanFamily.make(g, m, {"precision": "bf16"})
+        # pin order canonicalized
+        assert (ScanFamily.make(g, m, {"a": 1, "b": 2})
+                == ScanFamily.make(g, m, {"b": 2, "a": 1}))
+        assert hash(a) == hash(ScanFamily.make(g, m, {}))
