@@ -370,8 +370,10 @@ class SourcePrefetcher:
         IDLE --start()--> FILLING --queue full--> BLOCKED(producer)
         FILLING/BLOCKED --get()--> FILLING        consumer frees a slot
         last job done --> DRAINING --get() x k--> DONE (StopIteration)
-        job raises --> FAILED: the error is queued in-order and re-raised
-                       by the matching get(); later jobs are not run.
+        job raises --> the error is queued in-order and re-raised by the
+                       MATCHING get(); later jobs still run, so one bad
+                       load fails only its own scan and the queue stays
+                       positionally aligned (job k <-> get() k).
 
     Also iterable: ``for proj in SourcePrefetcher(jobs): ...``.
     """
@@ -395,8 +397,7 @@ class SourcePrefetcher:
             try:
                 item = (True, job())
             except BaseException as e:  # re-raised on the consumer side
-                self._put((False, e))
-                break
+                item = (False, e)
             if not self._put(item):
                 break
         self._put((True, self._DONE))
@@ -490,6 +491,12 @@ class AsyncWriteback:
                 pass  # surfaced by drain(); keep the queue moving
         fut = self._pool.submit(sink.write, volume, layout=layout)
         with self._lock:
+            # Prune completed-OK writes here, not only in drain(): callers
+            # that result() the returned future directly (the service's
+            # per-ticket join) would otherwise grow the list forever.
+            # Failed futures are kept so drain() can still re-raise them.
+            self._futures = [f for f in self._futures
+                             if not f.done() or f.exception() is not None]
             self._futures.append(fut)
         return fut
 

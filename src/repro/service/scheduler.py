@@ -83,10 +83,20 @@ class ReconstructionService:
     # -- admission -----------------------------------------------------------
 
     def _admit(self, family: ScanFamily):
-        """Resolve the family's plan (cached) and check one scan's
-        footprint against the budget — the reject half of admission; the
-        queue bound is the backpressure half."""
+        """Resolve the family's plan (cached) and check it serves: the
+        schedule must be batchable and one scan's footprint must fit the
+        budget — the reject half of admission; the queue bound is the
+        backpressure half."""
         plan = self.plan_cache.resolve(family)
+        if plan.schedule == "incremental":
+            # build_batched would raise at drain time; reject NOW so a
+            # bad pin never queues work the engine cannot serve.
+            raise AdmissionError(
+                "scan rejected: schedule='incremental' is stateful "
+                "(projections arrive as deltas) and cannot be served by "
+                "the batched engine — use plan.build_incremental() "
+                "directly, or pin a batch schedule "
+                "(fused/pipelined/chunked)")
         from repro.planner import check_feasible, point_from_plan
         ok, reason = check_feasible(family.geometry, point_from_plan(plan),
                                     self.hbm_bytes, self.vmem_budget)
@@ -105,7 +115,25 @@ class ReconstructionService:
         (VolumeSink) enables write-behind store of the result. `pins` are
         planner pins (precision=..., schedule=...) and widen the scan's
         family. Returns the scan's ticket; raises AdmissionError /
-        QueueFullError instead of queueing work that cannot be served."""
+        QueueFullError instead of queueing work that cannot be served.
+        Every rejection path counts in the `rejected` stat."""
+        try:
+            return self._submit(projections, geometry=geometry,
+                                source=source, sink=sink, scan_id=scan_id,
+                                pins=pins)
+        except AdmissionError:     # includes QueueFullError
+            with self._lock:
+                self._counters["rejected"] += 1
+            raise
+
+    def _check_queue_bound(self) -> None:
+        if len(self._queue) >= self.max_queue:
+            raise QueueFullError(
+                f"scan queue is full ({self.max_queue}); drain() or "
+                "shed load")
+
+    def _submit(self, projections, *, geometry: CBCTGeometry, source,
+                sink, scan_id, pins) -> ScanTicket:
         if (projections is None) == (source is None):
             raise AdmissionError(
                 "pass exactly one of projections= (in-memory scan) or "
@@ -116,14 +144,15 @@ class ReconstructionService:
                 raise AdmissionError(
                     f"projections shape {tuple(projections.shape)} does not "
                     f"match the declared geometry {want}")
-        family = ScanFamily.make(geometry, self.mesh, pins)
-        self._admit(family)   # raises AdmissionError on footprint
+        # Cheap backpressure check BEFORE the expensive admission step
+        # (plan resolve may be a full planner search) — a full queue must
+        # not pay for a search it is about to reject.
         with self._lock:
-            if len(self._queue) >= self.max_queue:
-                self._counters["rejected"] += 1
-                raise QueueFullError(
-                    f"scan queue is full ({self.max_queue}); drain() or "
-                    "shed load")
+            self._check_queue_bound()
+        family = ScanFamily.make(geometry, self.mesh, pins)
+        self._admit(family)   # raises AdmissionError on schedule/footprint
+        with self._lock:
+            self._check_queue_bound()   # re-check: racing submitters
             self._seq += 1
             ticket = ScanTicket(
                 scan_id=scan_id or f"scan-{self._seq}", family=family)
@@ -210,19 +239,36 @@ class ReconstructionService:
                 tickets = [s.ticket for s in scans]
                 for t in tickets:
                     t.state = TicketState.BATCHED
+                # Consume EXACTLY len(scans) prefetch items FIRST, before
+                # anything else in the bucket can fail: the prefetch queue
+                # is positional (load job k belongs to scan k), so a
+                # bucket that bailed early (plan resolve / engine build
+                # raising) would leave its loads queued and the NEXT
+                # bucket's get() calls would receive them — silent
+                # cross-scan data corruption. A failed load fails this
+                # bucket only; alignment is preserved either way.
+                lanes: List[object] = []
+                lane_err: Optional[BaseException] = None
+                for _ in scans:
+                    try:
+                        lanes.append(prefetch.get())
+                    except BaseException as e:
+                        lanes.append(None)
+                        if lane_err is None:
+                            lane_err = e
                 try:
+                    if lane_err is not None:
+                        raise lane_err
                     g = fam.geometry
                     plan = self.plan_cache.resolve(fam)
                     engine = plan.build_batched(bsz)
-                    lanes = [jnp.asarray(prefetch.get()) for _ in scans]
-                    self._counters["prefetched_loads"] += sum(
-                        1 for s in scans if s.source is not None)
+                    lanes = [jnp.asarray(l) for l in lanes]
+                    n_loads = sum(1 for s in scans if s.source is not None)
                     n_pad = bsz - len(lanes)
                     if n_pad:
                         pad = jnp.zeros((g.n_proj, g.n_v, g.n_u),
                                         jnp.float32)
                         lanes.extend([pad] * n_pad)
-                        self._counters["padded_lanes"] += n_pad
                     batch = jnp.stack(lanes)
                     if self.mesh is not None:
                         batch = jax.device_put(
@@ -233,23 +279,28 @@ class ReconstructionService:
                             and plan.reduce in SCATTER_REDUCES):
                         layout = {"kind": "y_chunk_major",
                                   "y_chunks": plan.y_chunks}
-                    self._counters["buckets"] += 1
                     for i, item in enumerate(scans):
                         vol = out[i]
                         item.ticket.volume = vol
                         item.ticket.state = TicketState.DONE
-                        self._counters["served"] += 1
                         if item.sink is not None:
                             writes.append((
                                 item.ticket,
                                 self._writeback.submit(item.sink, vol,
                                                        layout=layout)))
-                            self._counters["writebacks"] += 1
+                    with self._lock:
+                        self._counters["buckets"] += 1
+                        self._counters["padded_lanes"] += n_pad
+                        self._counters["prefetched_loads"] += n_loads
+                        self._counters["served"] += len(scans)
+                        self._counters["writebacks"] += sum(
+                            1 for s in scans if s.sink is not None)
                 except BaseException as e:
                     for item in scans:
                         item.ticket.state = TicketState.FAILED
                         item.ticket.error = e
-                        self._counters["failed"] += 1
+                    with self._lock:
+                        self._counters["failed"] += len(scans)
                 served.extend(tickets)
         finally:
             prefetch.close()
@@ -260,8 +311,9 @@ class ReconstructionService:
             except BaseException as e:
                 ticket.state = TicketState.FAILED
                 ticket.error = e
-                self._counters["served"] -= 1
-                self._counters["failed"] += 1
+                with self._lock:
+                    self._counters["served"] -= 1
+                    self._counters["failed"] += 1
         return served
 
     # -- introspection -------------------------------------------------------

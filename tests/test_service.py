@@ -141,6 +141,36 @@ class TestAdmission:
             svc.submit(projections=scans[0], source=object(), geometry=g)
         svc.close()
 
+    def test_incremental_schedule_pin_rejected_at_submit(self, case16):
+        """schedule='incremental' has no batched engine; a pinned request
+        must be rejected at submit, not queue work that fails at drain."""
+        g, scans = case16
+        svc = ReconstructionService()
+        with pytest.raises(AdmissionError, match="incremental"):
+            svc.submit(projections=scans[0], geometry=g,
+                       schedule="incremental")
+        assert svc.queued == 0
+        assert svc.stats()["rejected"] == 1
+        svc.close()
+
+    def test_every_rejection_path_counts(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(max_queue=1)
+        with pytest.raises(AdmissionError, match="shape"):
+            svc.submit(projections=jnp.zeros((1, 2, 3)), geometry=g)
+        with pytest.raises(AdmissionError, match="exactly one"):
+            svc.submit(geometry=g)
+        svc.submit(projections=scans[0], geometry=g)
+        with pytest.raises(QueueFullError):
+            svc.submit(projections=scans[1], geometry=g)
+        assert svc.stats()["rejected"] == 3
+        svc.close()
+        svc = ReconstructionService(hbm_bytes=1024)
+        with pytest.raises(AdmissionError, match="budget"):
+            svc.submit(projections=scans[0], geometry=g)
+        assert svc.stats()["rejected"] == 1
+        svc.close()
+
     def test_result_before_drain_raises(self, case16):
         g, scans = case16
         svc = ReconstructionService()
@@ -195,6 +225,71 @@ class TestAsyncIO:
         svc.close()
 
 
+class TestFailureIsolation:
+    def test_failed_engine_build_does_not_corrupt_next_bucket(
+            self, case16, tmp_path):
+        """REVIEW regression: a bucket that fails BEFORE consuming its
+        prefetched loads (plan resolve / engine build raising at drain
+        time) must not leave them queued — the next bucket's scans would
+        silently reconstruct from the wrong scans' data and be DONE."""
+        g, scans = case16
+        src_a = ProjectionSource.write(str(tmp_path / "a"),
+                                       np.asarray(scans[0]))
+        src_b = ProjectionSource.write(str(tmp_path / "b"),
+                                       np.asarray(scans[1]))
+        svc = ReconstructionService()
+        ta = svc.submit(source=src_a, geometry=g)
+        # a pinned request is its own family -> its own (later) bucket
+        tb = svc.submit(source=src_b, geometry=g, precision="bf16")
+        real_resolve = svc.plan_cache.resolve
+        calls = {"a": 0}
+
+        def poisoned(family):
+            if family == ta.family:
+                calls["a"] += 1
+                if calls["a"] > 1:   # bucketing resolve OK, serving fails
+                    raise RuntimeError("engine build exploded")
+            return real_resolve(family)
+
+        svc.plan_cache.resolve = poisoned
+        served = svc.drain()
+        svc.plan_cache.resolve = real_resolve
+        assert len(served) == 2
+        assert ta.state is TicketState.FAILED
+        assert isinstance(ta.error, RuntimeError)
+        # bucket B served from ITS OWN projections, bit-exact
+        assert tb.state is TicketState.DONE
+        ref = plan_from_spec(g, "auto", precision="bf16").build()(scans[1])
+        np.testing.assert_array_equal(np.asarray(tb.result()),
+                                      np.asarray(ref))
+        st = svc.stats()
+        assert st["failed"] == 1 and st["served"] == 1
+        svc.close()
+
+    def test_failed_load_fails_only_its_bucket(self, case16, tmp_path):
+        """A source whose load raises fails its own bucket's tickets with
+        PrefetchError; later buckets still serve from their own data."""
+        g, scans = case16
+
+        class ExplodingSource:
+            def load(self, mesh=None):
+                raise IOError("bad shard")
+
+        src_b = ProjectionSource.write(str(tmp_path / "b"),
+                                       np.asarray(scans[1]))
+        svc = ReconstructionService()
+        ta = svc.submit(source=ExplodingSource(), geometry=g)
+        tb = svc.submit(source=src_b, geometry=g, precision="bf16")
+        svc.drain()
+        assert ta.state is TicketState.FAILED
+        assert isinstance(ta.error, PrefetchError)
+        assert tb.state is TicketState.DONE
+        ref = plan_from_spec(g, "auto", precision="bf16").build()(scans[1])
+        np.testing.assert_array_equal(np.asarray(tb.result()),
+                                      np.asarray(ref))
+        svc.close()
+
+
 class TestPrefetcher:
     def test_order_preserved(self):
         """Jobs complete in submission order regardless of their cost —
@@ -229,11 +324,17 @@ class TestPrefetcher:
         pf.close()
 
     def test_error_propagates_as_prefetch_error(self):
+        """A failed load is re-raised by the MATCHING get(); later jobs
+        still run, so the queue stays positionally aligned (one bad shard
+        fails only its own scan, not every scan behind it)."""
         def boom():
             raise IOError("bad shard")
         pf = SourcePrefetcher([lambda: 1, boom, lambda: 3]).start()
         assert pf.get() == 1
         with pytest.raises(PrefetchError, match="bad shard"):
+            pf.get()
+        assert pf.get() == 3          # the worker did NOT stop at the error
+        with pytest.raises(StopIteration):
             pf.get()
         pf.close()
 
@@ -260,12 +361,28 @@ class TestWriteback:
         assert len(good.wrote) == 1
         wb.close()
 
+    def test_completed_futures_pruned_on_submit(self):
+        """REVIEW regression: a long-lived service result()s futures
+        directly and never calls drain(); submit must prune completed-OK
+        writes or the pending list grows forever."""
+        class Sink:
+            def write(self, volume, layout=None):
+                pass
+
+        wb = AsyncWriteback(max_pending=2)
+        for _ in range(8):
+            wb.submit(Sink(), jnp.ones((2,))).result()
+        assert len(wb._futures) <= 2    # not 8: done futures were pruned
+        wb.close()
+
     def test_backpressure_blocks_at_max_pending(self):
         release = threading.Event()
+        wrote = []
 
         class SlowSink:
             def write(self, volume, layout=None):
                 release.wait(5.0)
+                wrote.append(1)
 
         wb = AsyncWriteback(max_pending=1)
         t0 = time.monotonic()
@@ -277,7 +394,10 @@ class TestWriteback:
         threading.Thread(target=delayed_release, daemon=True).start()
         wb.submit(SlowSink(), jnp.ones((2,)))   # must wait for slot
         assert time.monotonic() - t0 >= 0.05
-        assert wb.drain() == 2
+        # the first write completed during submit #2's backpressure wait
+        # and was pruned there; drain joins (at least) the second.
+        assert wb.drain() >= 1
+        assert len(wrote) == 2      # both writes ran
         wb.close()
 
 
