@@ -122,6 +122,16 @@ def run(iters: int = 5, fast: bool = False):
             f"plan_searches={st['plan_cache']['searches']} "
             f"{'OK' if speedup >= 2.0 else 'MISS'}",
         ))
+        # Request latency straight off the service's metrics registry
+        # (obs/metrics histograms behind stats()["latency"]).
+        qw = st["latency"]["queue_wait"]
+        ttv = st["latency"]["time_to_volume"]
+        rows.append((
+            f"{label}/latency", (ttv["mean"] or 0.0) * 1e6,
+            f"time_to_volume_mean_us={(ttv['mean'] or 0.0) * 1e6:.0f} "
+            f"queue_wait_mean_us={(qw['mean'] or 0.0) * 1e6:.0f} "
+            f"n={ttv['count']}",
+        ))
     return rows
 
 

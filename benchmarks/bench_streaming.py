@@ -156,9 +156,15 @@ def main(argv=None) -> None:
         print(f"# wrote {args.json}")
 
 
-def write_json(path: str, rows) -> None:
-    """Persist benchmark rows as the PR-over-PR trajectory file."""
-    payload = [{"name": name, "us_per_call": us, "derived": derived}
+def write_json(path: str, rows, t_stage=None) -> None:
+    """Persist benchmark rows as the PR-over-PR trajectory file.
+
+    `t_stage` (optional dict of span name -> total seconds, from
+    `Tracer.stage_totals`) attaches the suite's traced stage breakdown to
+    every row — where the suite's wall time actually went, by pipeline
+    stage (repro/obs)."""
+    payload = [{"name": name, "us_per_call": us, "derived": derived,
+                **({"t_stage": t_stage} if t_stage else {})}
                for name, us, derived in rows]
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -57,8 +57,31 @@ def main(argv=None) -> None:
     ap.add_argument("--json", action="store_true",
                     help="additionally persist each suite's rows as "
                          "BENCH_<suite>.json at the repo root (the "
-                         "PR-over-PR perf trajectory files)")
+                         "PR-over-PR perf trajectory files); rows carry a "
+                         "t_stage breakdown from the stage tracer")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record every engine/stage span of the run and "
+                         "save a Chrome/Perfetto trace_event file "
+                         "(load at ui.perfetto.dev)")
     args = ap.parse_args(argv)
+
+    # --json wants per-suite t_stage breakdowns and --trace wants the
+    # span stream — both come from the same tracer. Fenced engine spans
+    # make each dispatch synchronous, which the suites do anyway (they
+    # block_until_ready inside their timing loops).
+    from repro.obs import trace as obs_trace
+    tracing = bool(args.trace) or args.json
+    if tracing:
+        obs_trace.enable()
+
+    def _stage_snapshot():
+        if not tracing:
+            return {}
+        tr = obs_trace.get_tracer()
+        totals = dict(tr.stage_totals("stage."))
+        totals.update(tr.stage_totals("engine."))
+        totals.update(tr.stage_totals("session."))
+        return totals
 
     selected = [s for s in suites if not args.suite or s[0] in args.suite]
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -70,6 +93,7 @@ def main(argv=None) -> None:
             kwargs["iters"] = args.iters
         if name == "fig6" and args.plan:
             kwargs["plan_spec"] = args.plan
+        before = _stage_snapshot()
         try:
             rows = list(fn(**kwargs))
         except Exception:
@@ -80,8 +104,20 @@ def main(argv=None) -> None:
         for row, us, derived in rows:
             print(f"{row},{us:.1f},{derived}")
         if args.json:
+            after = _stage_snapshot()
+            t_stage = {
+                k: round(v - before.get(k, 0.0), 6)
+                for k, v in sorted(after.items())
+                if v - before.get(k, 0.0) > 0.0
+            }
             bench_streaming.write_json(
-                os.path.join(root, f"BENCH_{name}.json"), rows)
+                os.path.join(root, f"BENCH_{name}.json"), rows,
+                t_stage=t_stage)
+    if args.trace:
+        obs_trace.get_tracer().save(args.trace)
+        print(f"# trace: {args.trace} "
+              f"({len(obs_trace.get_tracer().events())} spans)",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

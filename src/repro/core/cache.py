@@ -32,16 +32,39 @@ class CountingLRU:
 
     capacity <= 0 disables storage entirely (every get is a miss, every put
     a no-op) — useful to switch caching off without touching call sites.
+
+    `name` additionally mirrors every count into the process-global metrics
+    registry (repro/obs/metrics.py) as ``cache.<name>.{hits,misses,
+    evictions,unhashable}`` — the unified view across all caches. The int
+    attributes stay the per-INSTANCE truth (and what `stats()` reports);
+    registry counters are cumulative for the process and are never reset by
+    `clear()`. Unnamed caches (tests, scratch) stay registry-silent.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, name: Optional[str] = None):
         self.capacity = int(capacity)
+        self.name = name
         self._data: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.unhashable = 0
+        if name is None:
+            self._mirror = None
+        else:
+            from repro.obs import metrics as _metrics
+            self._mirror = {
+                c: _metrics.counter(f"cache.{name}.{c}")
+                for c in ("hits", "misses", "evictions", "unhashable")
+            }
+
+    def _count(self, which: str, n: int = 1) -> None:
+        """Increment an attribute counter (+ its registry mirror). Caller
+        holds the instance lock; the registry counter has its own."""
+        setattr(self, which, getattr(self, which) + n)
+        if self._mirror is not None:
+            self._mirror[which].inc(n)
 
     # -- mapping core --------------------------------------------------------
 
@@ -51,14 +74,14 @@ class CountingLRU:
             with self._lock:
                 val = self._data.get(key, _MISSING)
                 if val is _MISSING:
-                    self.misses += 1
+                    self._count("misses")
                     return default
                 self._data.move_to_end(key)
-                self.hits += 1
+                self._count("hits")
                 return val
         except TypeError:
             with self._lock:
-                self.unhashable += 1
+                self._count("unhashable")
             return default
 
     def put(self, key: Any, value: Any) -> None:
@@ -73,10 +96,10 @@ class CountingLRU:
                 self._data[key] = value
                 while len(self._data) > self.capacity:
                     self._data.popitem(last=False)
-                    self.evictions += 1
+                    self._count("evictions")
         except TypeError:
             with self._lock:
-                self.unhashable += 1
+                self._count("unhashable")
 
     def get_or_build(self, key: Any, build: Callable[[], Any]) -> Any:
         """Counted get, building (and caching) on miss. Unhashable keys
@@ -85,7 +108,7 @@ class CountingLRU:
             hash(key)
         except TypeError:
             with self._lock:
-                self.unhashable += 1
+                self._count("unhashable")
             return build()
         val = self.get(key, _MISSING)
         if val is not _MISSING:

@@ -45,6 +45,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 import numpy as np
 
 from repro.compat import shard_map
+from repro.obs.trace import get_tracer
 from repro.parallel.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD, axis_size
 from .cache import CountingLRU
 from .distributed import (
@@ -72,11 +73,30 @@ _PRECISIONS = ("fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2")
 # re-trace. Bounded LRU: engines pin compiled XLA executables, and a
 # long-lived service seeing many scan families must not leak them; the
 # hit/miss counters feed the service stats (repro/service).
-_ENGINE_CACHE = CountingLRU(capacity=64)
+_ENGINE_CACHE = CountingLRU(capacity=64, name="core.engine_cache")
 
 
 def clear_engine_cache() -> None:
     _ENGINE_CACHE.clear()
+
+
+def _traced_call(fn: Callable, name: str, attrs: dict) -> Callable:
+    """Wrap an engine callable in a fenced span when the process tracer is
+    on. The disabled path is ONE attribute load + branch per call (the
+    <1%-overhead contract, tests/test_obs.py); `attrs` are fixed at build
+    time so the hot path allocates nothing. The span's `dispatch_us` arg is
+    the async-dispatch time, its total duration dispatch + device compute
+    (`Span.fence` semantics)."""
+    def call(*args, **kwargs):
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return fn(*args, **kwargs)
+        with tracer.span(name, **attrs) as sp:
+            out = fn(*args, **kwargs)
+            sp.fence(out)
+        return out
+    call.__wrapped__ = fn
+    return call
 
 
 def engine_cache_stats() -> dict:
@@ -313,6 +333,19 @@ class ReconstructionPlan:
         from repro.kernels.backproject.ops import backproject_pallas
         bi, bj, bs = self.resolved_blocks()
         return partial(backproject_pallas, bi=bi, bj=bj, bs=bs)
+
+    def _span_attrs(self) -> dict:
+        """Fixed span args of this plan's engines (trace labels) — built
+        once at build() time, JSON-plain for the Perfetto export."""
+        grid = self.grid
+        return {
+            "schedule": self.schedule,
+            "impl": self.impl,
+            "reduce": self.reduce,
+            "precision": self.resolved_precision().storage,
+            "grid": f"{grid.r}x{grid.c}",
+            "n_steps": self.n_steps,
+        }
 
     def describe(self) -> dict:
         """Flat summary of the resolved plan (benchmark/report labels)."""
@@ -640,6 +673,8 @@ class ReconstructionPlan:
                     check_vma=False,
                 )(pmats_all, projections)
 
+        reconstruct_fn = _traced_call(
+            reconstruct_fn, "engine.reconstruct", self._span_attrs())
         _ENGINE_CACHE.put(self, reconstruct_fn)
         return reconstruct_fn
 
@@ -720,6 +755,9 @@ class ReconstructionPlan:
                     check_vma=False,
                 )(pmats_all, projections)
 
+        attrs = self._span_attrs()
+        attrs["batch"] = bsz
+        batched_fn = _traced_call(batched_fn, "engine.batched", attrs)
         _ENGINE_CACHE.put(key, batched_fn)
         return batched_fn
 
@@ -762,19 +800,160 @@ class ReconstructionPlan:
             layout = {"kind": "y_chunk_major", "y_chunks": self.y_chunks}
 
         def reconstruct_io(projections: Optional[Array] = None) -> Array:
+            tracer = get_tracer()
             if projections is None:
                 if source is None:
                     raise TypeError(
                         "this plan was built without a ProjectionSource; "
                         "pass the projections array")
-                projections = source.load(self.mesh)
+                with tracer.span("stage.read") as sp:
+                    projections = sp.fence(source.load(self.mesh))
             volume = engine(projections)
             if sink is not None:
                 jax.block_until_ready(volume)
-                sink.write(volume, layout=layout)
+                with tracer.span("stage.write"):
+                    sink.write(volume, layout=layout)
             return volume
 
         return reconstruct_io
+
+    # -- traced engine (per-stage attribution) -------------------------------
+
+    def build_traced(self, source=None, sink=None) -> Callable:
+        """The engine cut at its stage seams, each stage a fenced span —
+        the measurement counterpart of the planner's `PerfBreakdown`
+        (obs/attribution.py joins the two).
+
+        Every schedule runs the same FUSED stage decomposition here: one
+        jitted dispatch per stage (filter+encode, column AllGather, slab
+        back-projection, row-reduce epilogue; plus source read / sink write
+        when wired), fenced with `block_until_ready` between stages so each
+        span's duration is that stage's wall time — per-stage attribution
+        trades away the overlap the pipelined schedules buy, so a traced
+        run is a MEASUREMENT run, not a production configuration. Span
+        names are the fixed ``stage.*`` vocabulary of
+        `obs.attribution.STAGE_FIELDS`; output is always the canonical
+        fused layout (chunked+scatter's y-chunk-major store layout does
+        not apply).
+
+        Works with the tracer disabled too (stages just run unfenced);
+        enable via `obs.enable()` (or a local Tracer via obs.set_tracer)
+        to collect the spans.
+        """
+        if self.schedule == "incremental":
+            raise ValueError(
+                "schedule='incremental' is stateful; trace it through the "
+                "IncrementalSession spans (session.stage/fold/finalize) "
+                "instead of build_traced()")
+        self.validate()
+        g = self.geometry
+        mesh = self.mesh
+        st = self._make_stages()
+        has_scales = self.resolved_precision().codec.has_scales
+        nx_slab, scale = st.nx_slab, st.scale
+        attrs = self._span_attrs()
+
+        def bp_rank(pm_col, q_col, sc_col):
+            part = st.backproject(st.slab_pmats(pm_col), q_col,
+                                  nx_slab, g.n_y, g.n_z, scales=sc_col)
+            return part[None] if mesh is not None else part
+
+        def reduce_rank(parts):
+            slab = parts[0] if mesh is not None else parts
+            return st.reduce_slab(slab) * scale
+
+        if mesh is None:
+            _filter = jax.jit(st.filter_encode)
+            _gather = jax.jit(st.gather_cols)
+            bp_fn = jax.jit(bp_rank)
+            reduce_fn = jax.jit(reduce_rank)
+
+            def run_filter(proj):
+                return _filter(proj)           # (data, scales|None)
+
+            def run_gather(data, scales):
+                return _gather(pmats_all, data, scales)
+        else:
+            pspec = _proj_spec(mesh)
+            gspec = P(_lead_axes(st.dp))
+            # Un-reduced per-rank partial slabs: leading (pod x data) rank
+            # dim so every rank's partial survives the stage boundary
+            # (same trick as IncrementalSession's resident accumulator).
+            part_spec = P(_lead_axes(st.dp), AXIS_MODEL, None, None)
+            if has_scales:
+                # plain tuple: shard_map's out_specs prefix does not match
+                # the EncodedStream NamedTuple subtype.
+                _filter = jax.jit(shard_map(
+                    lambda raw: tuple(st.filter_encode(raw)), mesh=mesh,
+                    in_specs=(pspec,), out_specs=(pspec, pspec),
+                    check_vma=False))
+                _gather = jax.jit(shard_map(
+                    st.gather_cols, mesh=mesh,
+                    in_specs=(pspec, pspec, pspec),
+                    out_specs=(gspec, gspec, gspec), check_vma=False))
+
+                def run_filter(proj):
+                    return _filter(proj)
+
+                def run_gather(data, scales):
+                    return _gather(pmats_all, data, scales)
+            else:
+                _filter = jax.jit(shard_map(
+                    lambda raw: st.filter_encode(raw)[0], mesh=mesh,
+                    in_specs=(pspec,), out_specs=pspec, check_vma=False))
+                _gather = jax.jit(shard_map(
+                    lambda pm, d: st.gather_cols(pm, d, None)[:2],
+                    mesh=mesh, in_specs=(pspec, pspec),
+                    out_specs=(gspec, gspec), check_vma=False))
+
+                def run_filter(proj):
+                    return _filter(proj), None
+
+                def run_gather(data, scales):
+                    pm_col, q_col = _gather(pmats_all, data)
+                    return pm_col, q_col, None
+            # A None sc_col is an empty pytree: its gspec entry is simply
+            # unused (same convention as IncrementalSession's fold fns).
+            bp_fn = jax.jit(shard_map(
+                bp_rank, mesh=mesh, in_specs=(gspec, gspec, gspec),
+                out_specs=part_spec, check_vma=False))
+            reduce_fn = jax.jit(shard_map(
+                reduce_rank, mesh=mesh, in_specs=(part_spec,),
+                out_specs=output_spec(mesh, self.reduce),
+                check_vma=False))
+
+        pmats_all = jnp.asarray(projection_matrices(g))
+        if mesh is not None:
+            pmats_all = jax.device_put(pmats_all, input_sharding(mesh))
+
+        def reconstruct_traced(projections: Optional[Array] = None) -> Array:
+            tracer = get_tracer()
+            with tracer.span("engine.traced", **attrs):
+                if projections is None:
+                    if source is None:
+                        raise TypeError(
+                            "this traced plan has no ProjectionSource; "
+                            "pass the projections array")
+                    with tracer.span("stage.read") as sp:
+                        projections = sp.fence(source.load(mesh))
+                elif mesh is not None:
+                    projections = jax.device_put(projections,
+                                                 input_sharding(mesh))
+                with tracer.span("stage.filter") as sp:
+                    data, scales = sp.fence(run_filter(projections))
+                with tracer.span("stage.allgather") as sp:
+                    pm_col, q_col, sc_col = sp.fence(
+                        run_gather(data, scales))
+                with tracer.span("stage.backproject") as sp:
+                    parts = sp.fence(bp_fn(pm_col, q_col, sc_col))
+                with tracer.span("stage.reduce") as sp:
+                    volume = sp.fence(reduce_fn(parts))
+                if sink is not None:
+                    with tracer.span("stage.write"):
+                        sink.write(volume)
+            return volume
+
+        return reconstruct_traced
 
 
 def _lead_axes(axes: Tuple[str, ...]):
@@ -1142,8 +1321,10 @@ class IncrementalSession:
         benchmarks/bench_streaming.py)."""
         lo, hi = self._check_slice(angle_slice)
         self._check_delta_shape(projection_delta, lo, hi)
-        pm_d, raw_d = self._place_delta(projection_delta, lo, hi)
-        pm_col, q_col, sc_col = self._get_stage_fn(hi - lo)(pm_d, raw_d)
+        with get_tracer().span("session.stage", lo=lo, hi=hi) as sp:
+            pm_d, raw_d = self._place_delta(projection_delta, lo, hi)
+            pm_col, q_col, sc_col = sp.fence(
+                self._get_stage_fn(hi - lo)(pm_d, raw_d))
         return StagedDelta(lo, hi, pm_col, q_col, sc_col)
 
     def _check_delta_shape(self, delta, lo: int, hi: int) -> None:
@@ -1200,22 +1381,28 @@ class IncrementalSession:
             fn = self._get_update_fn(hi - lo, with_volume=finalize)
             args = self._place_delta(projection_delta, lo, hi)
         volume = None
-        if self._compensated:
-            if finalize:
-                self._acc, self._carry, volume = fn(
-                    self._acc, self._carry, *args)
+        staged = isinstance(projection_delta, StagedDelta)
+        with get_tracer().span("session.fold", lo=lo, hi=hi, staged=staged,
+                               final=finalize) as sp:
+            if self._compensated:
+                if finalize:
+                    self._acc, self._carry, volume = fn(
+                        self._acc, self._carry, *args)
+                else:
+                    self._acc, self._carry = fn(self._acc, self._carry,
+                                                *args)
+            elif finalize:
+                self._acc, volume = fn(self._acc, *args)
             else:
-                self._acc, self._carry = fn(self._acc, self._carry, *args)
-        elif finalize:
-            self._acc, volume = fn(self._acc, *args)
-        else:
-            self._acc = fn(self._acc, *args)
+                self._acc = fn(self._acc, *args)
+            sp.fence(volume if finalize else self._acc)
         self._covered[lo:hi] = True
         if not finalize:
             return self
         if self._sink is not None and self.is_complete:
             jax.block_until_ready(volume)
-            self._sink.write(volume)
+            with get_tracer().span("stage.write"):
+                self._sink.write(volume)
         return volume
 
     # -- source coupling ----------------------------------------------------
@@ -1228,9 +1415,11 @@ class IncrementalSession:
                 "session was built without a ProjectionSource; feed deltas "
                 "via update(delta, angle_slice) instead")
         n = 0
-        for lo, hi, delta in self._source.iter_deltas(self.plan.mesh):
-            self.update(delta, (lo, hi))
-            n += 1
+        with get_tracer().span("session.poll") as sp:
+            for lo, hi, delta in self._source.iter_deltas(self.plan.mesh):
+                self.update(delta, (lo, hi))
+                n += 1
+            sp.set(n_deltas=n)
         return n
 
     # -- epilogue -----------------------------------------------------------
@@ -1281,10 +1470,13 @@ class IncrementalSession:
                 f"folded; missing ranges {self.pending_ranges()} — fold "
                 "them (update/poll) or pass partial=True for a mid-scan "
                 "peek")
-        volume = self._get_finalize_fn()(self._acc)
+        tracer = get_tracer()
+        with tracer.span("session.finalize", partial=partial) as sp:
+            volume = sp.fence(self._get_finalize_fn()(self._acc))
         if self._sink is not None and not partial:
             jax.block_until_ready(volume)
-            self._sink.write(volume)
+            with tracer.span("stage.write"):
+                self._sink.write(volume)
         return volume
 
 

@@ -33,6 +33,7 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from functools import lru_cache
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple
@@ -42,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import Precision, resolve_precision
+from repro.obs import metrics as _metrics
+from repro.obs.trace import get_tracer
 
 from . import shard_store
 
@@ -391,13 +394,21 @@ class SourcePrefetcher:
         self._thread = threading.Thread(target=self._worker, daemon=True)
 
     def _worker(self) -> None:
+        # Metrics are re-fetched per job (not cached at start) so a
+        # registry reset between drains cannot orphan the instruments.
+        tracer = get_tracer()
         for job in self._jobs:
             if self._stop.is_set():
                 break
             try:
-                item = (True, job())
+                with tracer.span("io.prefetch.load", timed=True) as sp:
+                    item = (True, job())
+                _metrics.counter("io.prefetch.loads").inc()
+                _metrics.histogram("io.prefetch.load_seconds").observe(
+                    sp.duration_s)
             except BaseException as e:  # re-raised on the consumer side
                 item = (False, e)
+                _metrics.counter("io.prefetch.errors").inc()
             if not self._put(item):
                 break
         self._put((True, self._DONE))
@@ -407,6 +418,8 @@ class SourcePrefetcher:
         while not self._stop.is_set():
             try:
                 self._q.put(item, timeout=0.1)
+                _metrics.gauge("io.prefetch.queue_depth").set(
+                    self._q.qsize())
                 return True
             except queue.Full:
                 continue
@@ -423,7 +436,12 @@ class SourcePrefetcher:
         PrefetchError when that scan's load failed, StopIteration when all
         jobs are consumed."""
         self.start()
+        t0 = time.perf_counter()
         ok, item = self._q.get()
+        _metrics.gauge("io.prefetch.queue_depth").set(self._q.qsize())
+        if item is not self._DONE:   # blocked-on-worker time, real items only
+            _metrics.histogram("io.prefetch.wait_seconds").observe(
+                time.perf_counter() - t0)
         if not ok:
             raise PrefetchError(
                 f"background projection load failed: {item}") from item
@@ -489,7 +507,25 @@ class AsyncWriteback:
                 oldest.result()
             except BaseException:
                 pass  # surfaced by drain(); keep the queue moving
-        fut = self._pool.submit(sink.write, volume, layout=layout)
+
+        def _counted_write():
+            # Runs on the writeback worker thread: the span lands on its
+            # own tid in the trace, visualizing store/compute overlap.
+            t0 = time.perf_counter()
+            try:
+                with get_tracer().span("io.writeback.write"):
+                    out = sink.write(volume, layout=layout)
+            except BaseException:
+                _metrics.counter("io.writeback.errors").inc()
+                raise
+            finally:
+                _metrics.gauge("io.writeback.pending").set(self.pending)
+            _metrics.counter("io.writeback.writes").inc()
+            _metrics.histogram("io.writeback.write_seconds").observe(
+                time.perf_counter() - t0)
+            return out
+
+        fut = self._pool.submit(_counted_write)
         with self._lock:
             # Prune completed-OK writes here, not only in drain(): callers
             # that result() the returned future directly (the service's
@@ -498,6 +534,7 @@ class AsyncWriteback:
             self._futures = [f for f in self._futures
                              if not f.done() or f.exception() is not None]
             self._futures.append(fut)
+        _metrics.gauge("io.writeback.pending").set(self.pending)
         return fut
 
     def drain(self) -> int:

@@ -1,0 +1,43 @@
+"""Observability: span tracing, the unified metrics registry, and planner
+predicted-vs-measured attribution.
+
+Three layers (DESIGN.md §Observability):
+
+  trace.py        nested monotonic-clock spans with explicit
+                  `block_until_ready` fencing (dispatch-vs-compute
+                  attribution under async XLA), thread-safe, near-zero
+                  overhead when disabled, exported as Chrome/Perfetto
+                  ``trace_event`` JSON.
+  metrics.py      named counters / gauges / fixed-bucket histograms behind
+                  a process-global default registry; every subsystem's
+                  ad-hoc counters (engine cache, plan cache, scheduler,
+                  prefetcher, write-behind) report through it.
+  attribution.py  joins measured engine-stage spans onto the planner's
+                  `PerfBreakdown` prediction — per-stage model error.
+
+Quick start::
+
+    from repro import obs
+    obs.enable()                              # light up every subsystem
+    fdk = plan.build_traced(source=src, sink=sink)
+    volume = fdk()
+    obs.get_tracer().save("trace.json")       # load in ui.perfetto.dev
+    print(obs.attribution.render_report(
+        obs.attribution.compare(plan, obs.get_tracer())))
+"""
+from . import attribution, metrics, trace
+from .metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, counter, default_registry,
+    gauge, histogram,
+)
+from .trace import (
+    Span, Tracer, disable, enable, get_tracer, set_tracer, span,
+)
+
+__all__ = [
+    "attribution", "metrics", "trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "counter",
+    "default_registry", "gauge", "histogram",
+    "Span", "Tracer", "disable", "enable", "get_tracer", "set_tracer",
+    "span",
+]

@@ -17,7 +17,6 @@ Knobs:
 from __future__ import annotations
 
 import json
-import time
 from typing import Dict, List
 
 import jax
@@ -25,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.geometry import CBCTGeometry
 from repro.filecache import JsonFileCache
+from repro.obs.trace import get_tracer
 
 from .search import PlanProposal
 
@@ -87,10 +87,14 @@ def measure_proposal(g: CBCTGeometry, proposal: PlanProposal,
         from repro.core.distributed import input_sharding
         proj = jax.device_put(proj, input_sharding(plan.mesh))
     jax.block_until_ready(fn(proj))  # compile + warm up
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(proj))
-    seconds = (time.perf_counter() - t0) / iters
+    # timed=True: the span measures even with tracing disabled (this IS the
+    # measurement); with tracing enabled the refinement runs also land in
+    # the exported trace, attributable per proposal via the spec attr.
+    with get_tracer().span("planner.measure", timed=True, iters=iters,
+                           spec=plan.describe().get("schedule")) as sp:
+        for _ in range(iters):
+            jax.block_until_ready(fn(proj))
+    seconds = sp.duration_s / iters
     _CACHE[key] = seconds
     _FILE_CACHE.put(key, seconds)
     return seconds

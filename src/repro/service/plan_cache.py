@@ -28,14 +28,17 @@ class PlanCache:
     """
 
     def __init__(self, capacity: int = 32, spec: str = "auto"):
-        self._lru = CountingLRU(capacity)
+        self._lru = CountingLRU(capacity, name="service.plan_cache")
         self.spec = spec
         self.searches = 0    # planner-search (cold resolve) count
+        from repro.obs import metrics as _metrics
+        self._searches_total = _metrics.counter("service.plan_cache.searches")
 
     def resolve(self, family: ScanFamily):
         def build():
             from repro.core.plan import plan_from_spec
             self.searches += 1
+            self._searches_total.inc()
             plan = plan_from_spec(family.geometry, self.spec,
                                   mesh=family.mesh, **family.pins_dict())
             plan.validate()

@@ -73,6 +73,10 @@ class ScanTicket:
     state: TicketState = TicketState.QUEUED
     volume: Optional[object] = None
     error: Optional[BaseException] = None
+    # Monotonic submit timestamp (time.perf_counter()), stamped by the
+    # scheduler at admission — the zero point for the queue-wait and
+    # time-to-volume latency histograms. None for hand-built tickets.
+    submitted_at: Optional[float] = None
 
     @property
     def done(self) -> bool:

@@ -21,6 +21,7 @@ volumes are written behind (AsyncWriteback) while the next bucket runs.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.geometry import CBCTGeometry
 from repro.io.streams import AsyncWriteback, SourcePrefetcher
+from repro.obs.metrics import DEFAULT_TIME_BUCKETS, MetricsRegistry
+from repro.obs.trace import get_tracer
 
 from .plan_cache import PlanCache
 from .requests import (
@@ -74,11 +77,24 @@ class ReconstructionService:
         self._queue: List[_QueuedScan] = []
         self._lock = threading.Lock()
         self._seq = 0
-        self._counters = {
-            "submitted": 0, "rejected": 0, "served": 0, "failed": 0,
-            "buckets": 0, "padded_lanes": 0, "prefetched_loads": 0,
-            "writebacks": 0,
+        # Per-INSTANCE metrics registry (not the process-global default):
+        # two services on one process must not pool their counts, and the
+        # tests assert per-service stats. `stats()` is a thin view over it.
+        self.metrics = MetricsRegistry()
+        self._c = {
+            k: self.metrics.counter(f"service.scans.{k}")
+            for k in ("submitted", "rejected", "served", "failed",
+                      "store_failed")
         }
+        for k in ("buckets", "padded_lanes", "prefetched_loads",
+                  "writebacks"):
+            self._c[k] = self.metrics.counter(f"service.{k}")
+        self._h_queue_wait = self.metrics.histogram(
+            "service.queue_wait_seconds", DEFAULT_TIME_BUCKETS)
+        self._h_assembly = self.metrics.histogram(
+            "service.bucket_assembly_seconds", DEFAULT_TIME_BUCKETS)
+        self._h_ttv = self.metrics.histogram(
+            "service.time_to_volume_seconds", DEFAULT_TIME_BUCKETS)
 
     # -- admission -----------------------------------------------------------
 
@@ -122,8 +138,7 @@ class ReconstructionService:
                                 source=source, sink=sink, scan_id=scan_id,
                                 pins=pins)
         except AdmissionError:     # includes QueueFullError
-            with self._lock:
-                self._counters["rejected"] += 1
+            self._c["rejected"].inc()
             raise
 
     def _check_queue_bound(self) -> None:
@@ -155,11 +170,12 @@ class ReconstructionService:
             self._check_queue_bound()   # re-check: racing submitters
             self._seq += 1
             ticket = ScanTicket(
-                scan_id=scan_id or f"scan-{self._seq}", family=family)
+                scan_id=scan_id or f"scan-{self._seq}", family=family,
+                submitted_at=time.perf_counter())
             self._queue.append(_QueuedScan(ticket=ticket,
                                            projections=projections,
                                            source=source, sink=sink))
-            self._counters["submitted"] += 1
+            self._c["submitted"].inc()
         return ticket
 
     @property
@@ -230,15 +246,25 @@ class ReconstructionService:
             return []
         from repro.core.distributed import SCATTER_REDUCES, \
             batched_input_sharding
+        tracer = get_tracer()
         prefetch = SourcePrefetcher(self._load_jobs(buckets),
                                     depth=self.prefetch_depth).start()
         served: List[ScanTicket] = []
         writes: List[Tuple[ScanTicket, object]] = []
+        drain_span = tracer.span("service.drain", n_buckets=len(buckets))
+        drain_span.__enter__()
         try:
             for fam, scans, bsz in buckets:
+                bucket_span = tracer.span("service.bucket", batch=bsz,
+                                          scans=len(scans))
+                bucket_span.__enter__()
+                t_bucket0 = time.perf_counter()
                 tickets = [s.ticket for s in scans]
                 for t in tickets:
                     t.state = TicketState.BATCHED
+                    if t.submitted_at is not None:
+                        self._h_queue_wait.observe(
+                            t_bucket0 - t.submitted_at)
                 # Consume EXACTLY len(scans) prefetch items FIRST, before
                 # anything else in the bucket can fail: the prefetch queue
                 # is positional (load job k belongs to scan k), so a
@@ -247,6 +273,8 @@ class ReconstructionService:
                 # bucket's get() calls would receive them — silent
                 # cross-scan data corruption. A failed load fails this
                 # bucket only; alignment is preserved either way.
+                asm_span = tracer.span("service.bucket.assemble")
+                asm_span.__enter__()
                 lanes: List[object] = []
                 lane_err: Optional[BaseException] = None
                 for _ in scans:
@@ -273,37 +301,49 @@ class ReconstructionService:
                     if self.mesh is not None:
                         batch = jax.device_put(
                             batch, batched_input_sharding(self.mesh))
+                    asm_span.__exit__(None, None, None)
+                    asm_span = None
+                    self._h_assembly.observe(
+                        time.perf_counter() - t_bucket0)
                     out = engine(batch)
+                    bucket_span.fence(out)
                     layout = None
                     if (plan.schedule == "chunked"
                             and plan.reduce in SCATTER_REDUCES):
                         layout = {"kind": "y_chunk_major",
                                   "y_chunks": plan.y_chunks}
+                    t_done = time.perf_counter()
                     for i, item in enumerate(scans):
                         vol = out[i]
                         item.ticket.volume = vol
                         item.ticket.state = TicketState.DONE
+                        if item.ticket.submitted_at is not None:
+                            self._h_ttv.observe(
+                                t_done - item.ticket.submitted_at)
                         if item.sink is not None:
                             writes.append((
                                 item.ticket,
                                 self._writeback.submit(item.sink, vol,
                                                        layout=layout)))
-                    with self._lock:
-                        self._counters["buckets"] += 1
-                        self._counters["padded_lanes"] += n_pad
-                        self._counters["prefetched_loads"] += n_loads
-                        self._counters["served"] += len(scans)
-                        self._counters["writebacks"] += sum(
-                            1 for s in scans if s.sink is not None)
+                    self._c["buckets"].inc()
+                    self._c["padded_lanes"].inc(n_pad)
+                    self._c["prefetched_loads"].inc(n_loads)
+                    self._c["served"].inc(len(scans))
+                    self._c["writebacks"].inc(
+                        sum(1 for s in scans if s.sink is not None))
                 except BaseException as e:
                     for item in scans:
                         item.ticket.state = TicketState.FAILED
                         item.ticket.error = e
-                    with self._lock:
-                        self._counters["failed"] += len(scans)
+                    self._c["failed"].inc(len(scans))
+                finally:
+                    if asm_span is not None:   # bucket failed mid-assembly
+                        asm_span.__exit__(None, None, None)
+                    bucket_span.__exit__(None, None, None)
                 served.extend(tickets)
         finally:
             prefetch.close()
+            drain_span.__exit__(None, None, None)
         # Join write-behind stores; a failed write fails ITS ticket only.
         for ticket, fut in writes:
             try:
@@ -311,21 +351,45 @@ class ReconstructionService:
             except BaseException as e:
                 ticket.state = TicketState.FAILED
                 ticket.error = e
-                with self._lock:
-                    self._counters["served"] -= 1
-                    self._counters["failed"] += 1
+                # Counters are monotonic: a store failure retracts the scan
+                # from the *served* view via its own counter rather than
+                # decrementing (stats() reports served - store_failed).
+                self._c["store_failed"].inc()
+                self._c["failed"].inc()
         return served
 
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> dict:
-        """Counters + cache stats. `plan_cache.searches` staying flat while
-        `submitted` grows is the amortization proof (one planner search per
-        scan family); `engine_cache` covers the jitted batched engines."""
+        """Counters + cache stats — a thin view over `self.metrics` (the
+        per-instance registry), keeping the historical flat keys.
+        `plan_cache.searches` staying flat while `submitted` grows is the
+        amortization proof (one planner search per scan family);
+        `engine_cache` covers the jitted batched engines. `latency` holds
+        the queue-wait / bucket-assembly / time-to-volume histogram
+        snapshots."""
         from repro.core.plan import engine_cache_stats
+        v = self.metrics.value
+        counters = {
+            "submitted": v("service.scans.submitted", 0),
+            "rejected": v("service.scans.rejected", 0),
+            # store_failed retracts write-behind failures from the served
+            # view (monotonic counters cannot decrement).
+            "served": (v("service.scans.served", 0)
+                       - v("service.scans.store_failed", 0)),
+            "failed": v("service.scans.failed", 0),
+            "buckets": v("service.buckets", 0),
+            "padded_lanes": v("service.padded_lanes", 0),
+            "prefetched_loads": v("service.prefetched_loads", 0),
+            "writebacks": v("service.writebacks", 0),
+        }
         with self._lock:
-            counters = dict(self._counters)
             counters["queued"] = len(self._queue)
+        counters["latency"] = {
+            "queue_wait": self._h_queue_wait.snapshot(),
+            "bucket_assembly": self._h_assembly.snapshot(),
+            "time_to_volume": self._h_ttv.snapshot(),
+        }
         counters["plan_cache"] = self.plan_cache.stats()
         counters["engine_cache"] = engine_cache_stats()
         return counters
