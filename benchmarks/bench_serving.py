@@ -19,14 +19,24 @@ engine + prefetch/write-behind) against the loop it replaces:
   service        ReconstructionService.submit x B + drain() on warm caches:
                  one planner search per family ever, one vmapped dispatch
                  per bucket of B scans.
+  serve_loop     the hardened mode (ISSUE 9): serve() background drain
+                 loop, submit with a per-scan time-to-volume SLO
+                 (deadline_s), callers ticket.wait() — measures the
+                 continuously-serving path end to end and reports SLO
+                 attainment (service.slo.met/missed off the
+                 service.time_to_volume_seconds histogram clock).
 
 Acceptance (ISSUE 7): a bucket of >= 4 same-geometry scans must serve
 >= 2x the scans/hour of the serial single-scan loop. Each service row's
 `derived` carries scans_per_hour plus the speedups against both baselines
 and an OK/MISS verdict. serial_warm and service are sampled interleaved
 (min-of-iters, bench_streaming idiom) so host drift cannot pick the
-winner; serial_cold is compile-dominated and sampled separately.
-`main()` (or ``run.py --json``) persists rows as BENCH_serving.json.
+winner; serial_cold is compile-dominated and sampled separately. The
+serve_loop/slo row (ISSUE 9 acceptance) reports attainment against a
+deadline of 4x the measured warm per-scan time — generous enough that a
+healthy loop attains ~100%, tight enough that a stalled loop shows up in
+the nightly BENCH_serving.json trajectory. `main()` (or ``run.py
+--json``) persists rows as BENCH_serving.json.
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ from benchmarks.bench_streaming import _interleaved_best, write_json
 from repro.core.geometry import default_geometry
 from repro.core.phantom import forward_project
 from repro.core.plan import clear_engine_cache, plan_from_spec
-from repro.service import ReconstructionService
+from repro.service import ReconstructionService, ScanFamily
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
@@ -71,7 +81,46 @@ def _time_serial_cold(g, scans, iters: int) -> float:
     return best
 
 
-def run(iters: int = 5, fast: bool = False):
+def _time_serve_loop(g, scans, iters: int, deadline_s: float,
+                     policy: str = "deadline"):
+    """Per-scan seconds + SLO attainment for the background-loop mode:
+    submit with a deadline, ticket.wait(), shutdown between rounds is NOT
+    paid (one loop serves every round — that is the mode's point)."""
+    svc = ReconstructionService(max_batch=len(scans), policy=policy)
+    # Steady-state measurement: racing submits can split a round into any
+    # power-of-two bucket size, so pre-compile them all — otherwise one
+    # cold batched-engine compile lands in a measured round and the SLO
+    # row reports compile time, not serving behavior.
+    fam = ScanFamily.make(g, None, {})
+    plan = svc.plan_cache.resolve(fam)
+    b = 1
+    while b <= len(scans):
+        warm = jnp.zeros((b, g.n_proj, g.n_v, g.n_u), jnp.float32)
+        jax.block_until_ready(plan.build_batched(b)(warm))
+        b *= 2
+    svc.serve()
+    best = float("inf")
+    try:
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            tickets = [svc.submit(projections=s, geometry=g,
+                                  deadline_s=deadline_s) for s in scans]
+            for t in tickets:
+                if not t.wait(timeout=300.0):
+                    raise RuntimeError(
+                        f"serve loop missed the 300 s bench timeout for "
+                        f"{t.scan_id} (state {t.state.value})")
+            jax.block_until_ready(tickets[-1].volume)
+            best = min(best,
+                       (time.perf_counter() - t0) / len(scans))
+    finally:
+        svc.shutdown()
+        st = svc.stats()
+        svc.close()
+    return best, st
+
+
+def run(iters: int = 5, fast: bool = False, policy: str = "deadline"):
     rows = []
     cases = [(32, 64, 4)] if fast else [(32, 64, 4), (48, 96, 8)]
     for n, npj, bucket in cases:
@@ -132,21 +181,52 @@ def run(iters: int = 5, fast: bool = False):
             f"queue_wait_mean_us={(qw['mean'] or 0.0) * 1e6:.0f} "
             f"n={ttv['count']}",
         ))
+
+        # -- background-loop mode (ISSUE 9): serve() + deadline SLOs ------
+        deadline_s = 4.0 * t_warm * bucket     # 4x one warm round per scan
+        t_loop, st_loop = _time_serve_loop(g, scans,
+                                           max(2, iters // 2),
+                                           deadline_s, policy=policy)
+        sph_loop = _scans_per_hour(t_loop)
+        slo = st_loop["slo"]
+        ttv_loop = st_loop["latency"]["time_to_volume"]
+        attain = slo["attainment"]
+        rows.append((
+            f"{label}/serve_loop", t_loop * 1e6,
+            f"scans_per_hour={sph_loop:.0f} policy={policy} "
+            f"loop_passes={st_loop['loop']['passes']} "
+            f"speedup_vs_warm={sph_loop / sph_warm:.2f}x",
+        ))
+        rows.append((
+            f"{label}/slo", (ttv_loop["mean"] or 0.0) * 1e6,
+            f"attainment={attain if attain is None else round(attain, 4)} "
+            f"met={slo['met']} missed={slo['missed']} "
+            f"deadline_us={deadline_s * 1e6:.0f} "
+            f"ttv_mean_us={(ttv_loop['mean'] or 0.0) * 1e6:.0f} "
+            f"ttv_max_us={(ttv_loop['max'] or 0.0) * 1e6:.0f} "
+            f"{'OK' if (attain or 0.0) >= 0.99 else 'MISS'}",
+        ))
     return rows
 
 
 def main(argv=None) -> None:
     import argparse
 
+    from repro.service import SCHEDULING_POLICIES
+
     ap = argparse.ArgumentParser(
         description="reconstruction-as-a-service throughput bench")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--policy", default="deadline",
+                    choices=SCHEDULING_POLICIES,
+                    help="bucket scheduling policy for the serve-loop "
+                         "mode (default: deadline)")
     ap.add_argument("--json", nargs="?", const=JSON_PATH, default=None,
                     metavar="PATH",
                     help=f"persist rows as JSON (default {JSON_PATH})")
     args = ap.parse_args(argv)
-    rows = run(iters=args.iters, fast=args.fast)
+    rows = run(iters=args.iters, fast=args.fast, policy=args.policy)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -54,6 +54,11 @@ def main(argv=None) -> None:
                          "e.g. 'schedule=pipelined,n_steps=2,precision=bf16'"
                          " — or 'auto' to let the planner pick "
                          "(repro/planner)")
+    ap.add_argument("--policy", default=None,
+                    choices=["fifo", "largest_bucket", "deadline"],
+                    help="bucket scheduling policy for the serving suite's "
+                         "serve-loop mode (repro/service; default: "
+                         "deadline)")
     ap.add_argument("--json", action="store_true",
                     help="additionally persist each suite's rows as "
                          "BENCH_<suite>.json at the repo root (the "
@@ -93,6 +98,8 @@ def main(argv=None) -> None:
             kwargs["iters"] = args.iters
         if name == "fig6" and args.plan:
             kwargs["plan_spec"] = args.plan
+        if name == "serving" and args.policy:
+            kwargs["policy"] = args.policy
         before = _stage_snapshot()
         try:
             rows = list(fn(**kwargs))

@@ -34,6 +34,7 @@ import os
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from functools import lru_cache
 from typing import Callable, Iterator, List, Optional, Sequence, Tuple
@@ -228,8 +229,16 @@ class ProjectionSource:
         by_range = {
             (tuple(e["index"][0][:2])): e["file"] for e in m["shards"]}
         for lo, hi in self.poll():
-            yield lo, hi, self.load_slice(lo, hi, mesh)
+            delta = self.load_slice(lo, hi, mesh)
+            # Mark consumed BEFORE yielding: the delta is fully loaded by
+            # now, and a consumer that breaks (or errors) after receiving
+            # it closes this generator — marking after the yield would
+            # never run, so the already-folded range would be re-reported
+            # by the next poll() and trip the session's overlap rejection.
+            # A load_slice failure still leaves the range unconsumed
+            # (retryable).
             self._consumed.add(by_range[(lo, hi)])
+            yield lo, hi, delta
 
 
 class StreamingProjectionWriter:
@@ -367,12 +376,25 @@ class SourcePrefetcher:
     depth : how many loaded scans may sit ready ahead of the consumer
             (default 2 = classic double buffering: scan k+1 loads while
             scan k computes; memory stays bounded at `depth` scans).
+    persistent : keep the worker alive after the initial jobs drain so
+            `extend(jobs)` can feed it more work — the serve-loop mode
+            (ReconstructionService.serve() runs ONE prefetcher across all
+            drain passes instead of paying a thread spawn/join per pass).
+            A persistent prefetcher only reaches DONE via `finish()` or
+            `close()`; a one-shot one (the default) is finished at
+            construction, exactly the pre-loop contract.
 
     State machine (DESIGN.md §Serving):
 
         IDLE --start()--> FILLING --queue full--> BLOCKED(producer)
         FILLING/BLOCKED --get()--> FILLING        consumer frees a slot
-        last job done --> DRAINING --get() x k--> DONE (StopIteration)
+        persistent + jobs drained --> IDLE(worker) --extend()--> FILLING
+        last job done after finish()/one-shot ctor --> DRAINING
+            --get() x k--> DONE (StopIteration, LATCHED: every later
+            get() raises StopIteration again instead of blocking on the
+            empty queue forever)
+        close() --> DONE (worker unblocked + joined; pending jobs
+            abandoned; later get() raises StopIteration)
         job raises --> the error is queued in-order and re-raised by the
                        MATCHING get(); later jobs still run, so one bad
                        load fails only its own scan and the queue stays
@@ -383,22 +405,60 @@ class SourcePrefetcher:
 
     _DONE = object()
 
-    def __init__(self, jobs: Sequence[Callable[[], object]],
-                 depth: int = 2):
+    def __init__(self, jobs: Sequence[Callable[[], object]] = (),
+                 depth: int = 2, persistent: bool = False):
         if depth < 1:
             raise ValueError(f"prefetch depth={depth} must be >= 1")
-        self._jobs = list(jobs)
+        self._pending: "deque[Callable[[], object]]" = deque(jobs)
+        self._jobs_cv = threading.Condition()
+        self._no_more_jobs = not persistent   # one-shot: finished at ctor
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._started = False
+        self._finished = False    # consumer-side latch: DONE was observed
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
+
+    def extend(self, jobs: Sequence[Callable[[], object]]) -> None:
+        """Queue more load jobs on a `persistent` prefetcher (serve-loop
+        reuse across drain passes). Raises on a finished/closed one —
+        its worker is (or is about to be) gone."""
+        with self._jobs_cv:
+            if self._no_more_jobs or self._stop.is_set():
+                raise RuntimeError(
+                    "cannot extend a finished prefetcher (one-shot, "
+                    "finish()ed, or closed)")
+            self._pending.extend(jobs)
+            self._jobs_cv.notify()
+
+    def finish(self) -> None:
+        """No more jobs are coming: after the pending ones drain, the
+        worker queues DONE and exits (persistent mode's graceful end)."""
+        with self._jobs_cv:
+            self._no_more_jobs = True
+            self._jobs_cv.notify()
+
+    def _next_job(self):
+        """Worker-side: the next job, or None when the prefetcher is done
+        (stopped, or finished with nothing pending)."""
+        with self._jobs_cv:
+            while True:
+                if self._stop.is_set():
+                    return None
+                if self._pending:
+                    return self._pending.popleft()
+                if self._no_more_jobs:
+                    return None
+                # persistent + idle: wait for extend()/finish()/close().
+                # The timeout is a safety net against a lost notify.
+                self._jobs_cv.wait(timeout=0.1)
 
     def _worker(self) -> None:
         # Metrics are re-fetched per job (not cached at start) so a
         # registry reset between drains cannot orphan the instruments.
         tracer = get_tracer()
-        for job in self._jobs:
-            if self._stop.is_set():
+        while True:
+            job = self._next_job()
+            if job is None:
                 break
             try:
                 with tracer.span("io.prefetch.load", timed=True) as sp:
@@ -434,10 +494,25 @@ class SourcePrefetcher:
     def get(self):
         """Next loaded scan, blocking until the worker has it. Raises
         PrefetchError when that scan's load failed, StopIteration when all
-        jobs are consumed."""
+        jobs are consumed — idempotently: exhaustion is latched, so calling
+        get() again keeps raising StopIteration instead of deadlocking on
+        the empty queue (the DONE sentinel is only ever queued once). get()
+        after close() likewise raises StopIteration once the (abandoned)
+        queue is drained."""
         self.start()
+        if self._finished:
+            raise StopIteration
         t0 = time.perf_counter()
-        ok, item = self._q.get()
+        while True:
+            try:
+                ok, item = self._q.get(timeout=0.05)
+                break
+            except queue.Empty:
+                # A closed prefetcher's worker may have died without
+                # queueing DONE (close() makes _put give up); don't hang.
+                if self._stop.is_set() and not self._thread.is_alive():
+                    self._finished = True
+                    raise StopIteration from None
         _metrics.gauge("io.prefetch.queue_depth").set(self._q.qsize())
         if item is not self._DONE:   # blocked-on-worker time, real items only
             _metrics.histogram("io.prefetch.wait_seconds").observe(
@@ -446,6 +521,7 @@ class SourcePrefetcher:
             raise PrefetchError(
                 f"background projection load failed: {item}") from item
         if item is self._DONE:
+            self._finished = True
             raise StopIteration
         return item
 
@@ -459,10 +535,14 @@ class SourcePrefetcher:
 
     def close(self) -> None:
         """Stop loading; pending jobs are abandoned (no partial results are
-        handed out)."""
+        handed out — even already-loaded ones still sitting in the queue)
+        and later get() calls raise StopIteration."""
         self._stop.set()
+        with self._jobs_cv:
+            self._jobs_cv.notify()
         if self._started:
             self._thread.join(timeout=5.0)
+        self._finished = True
 
 
 class AsyncWriteback:

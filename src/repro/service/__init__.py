@@ -25,16 +25,32 @@ staged engine (core/plan.py) into a throughput machine:
     volume = t1.volume
     svc.stats()["plan_cache"]        # {"searches": 1, "hits": 1, ...}
 
+Continuous serving (the hardened mode): `serve()` starts a background
+drain loop — submit() wakes it through a condition variable, callers
+`ticket.wait(timeout=)` instead of draining, per-scan `deadline_s`
+time-to-volume SLOs are counted in `service.slo.met/missed`, and a
+pluggable `policy=` ("fifo" | "largest_bucket" | "deadline") orders
+buckets across families with per-family fairness:
+
+    svc = ReconstructionService(mesh, policy="deadline").serve()
+    t = svc.submit(projections=p, geometry=g, deadline_s=30.0)
+    t.wait(timeout=60); volume = t.result()
+    svc.shutdown()                   # graceful: queued work serves first
+
 Throughput figure of merit: scans/hour at fixed fleet
-(benchmarks/bench_serving.py, persisted as BENCH_serving.json).
+(benchmarks/bench_serving.py, persisted as BENCH_serving.json — the
+serve-loop rows carry SLO attainment).
 """
 from .requests import (  # noqa: F401
     AdmissionError, QueueFullError, ScanFamily, ScanTicket, TicketState,
 )
 from .plan_cache import PlanCache  # noqa: F401
-from .scheduler import ReconstructionService  # noqa: F401
+from .scheduler import (  # noqa: F401
+    ReconstructionService, SCHEDULING_POLICIES,
+)
 
 __all__ = [
     "AdmissionError", "QueueFullError", "ScanFamily", "ScanTicket",
     "TicketState", "PlanCache", "ReconstructionService",
+    "SCHEDULING_POLICIES",
 ]

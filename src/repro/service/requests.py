@@ -8,13 +8,19 @@ and every array shape in the pipeline. It is also the plan-cache key
 the same statement.
 
 A **ticket** is the caller's handle on one submitted scan: its lifecycle
-(QUEUED -> BATCHED -> DONE | FAILED; REJECTED never enters the queue), the
-reconstructed volume once served, and the error if its bucket failed.
+(QUEUED -> BATCHED -> SERVING -> DONE | FAILED; REJECTED never enters the
+queue), the reconstructed volume once served, and the error if its bucket
+failed. With the background drain loop (scheduler.serve()) tickets are
+served on another thread, so every state transition goes through
+`_set_state` (one lock per ticket, terminal states sticky against
+non-terminal writes) and terminal transitions fire a per-ticket
+`threading.Event` that `wait(timeout=)` callers block on.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 from typing import Optional
 
 from repro.core.geometry import CBCTGeometry
@@ -57,16 +63,31 @@ class ScanFamily:
 
 class TicketState(enum.Enum):
     QUEUED = "queued"       # admitted, waiting for a drain
-    BATCHED = "batched"     # assigned to a bucket this drain
+    BATCHED = "batched"     # assigned to a bucket this drain pass
+    SERVING = "serving"     # its bucket's batched dispatch is in flight
     DONE = "done"           # volume ready (and stored, if a sink was given)
     FAILED = "failed"       # its bucket's dispatch or store raised
+
+
+#: Terminal states — once reached, only terminal->terminal transitions are
+#: allowed (a write-behind store failure flips DONE -> FAILED; nothing can
+#: resurrect a finished ticket back into the queue's states).
+TERMINAL_STATES = frozenset({TicketState.DONE, TicketState.FAILED})
 
 
 @dataclasses.dataclass
 class ScanTicket:
     """One submitted scan's handle. `volume` is the engine's per-scan
     output (sharded like the single-scan engine's); `error` holds the
-    exception when state is FAILED."""
+    exception when state is FAILED.
+
+    Tickets served by the background loop finish on another thread:
+    `wait(timeout=)` blocks until the ticket is terminal (DONE or FAILED —
+    the loop fires `_done_event` exactly at that transition), and
+    `deadline_s` is the caller's time-to-volume SLO target, measured from
+    `submitted_at` (the scheduler counts `service.slo.met/missed` against
+    the absolute `deadline` at completion time).
+    """
 
     scan_id: str
     family: ScanFamily
@@ -77,14 +98,62 @@ class ScanTicket:
     # scheduler at admission — the zero point for the queue-wait and
     # time-to-volume latency histograms. None for hand-built tickets.
     submitted_at: Optional[float] = None
+    # Time-to-volume SLO target in seconds from submit (None = no SLO).
+    deadline_s: Optional[float] = None
+    _done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+    _state_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute SLO deadline on the `time.perf_counter()` clock, or
+        None when the scan has no SLO (or no submit timestamp)."""
+        if self.deadline_s is None or self.submitted_at is None:
+            return None
+        return self.submitted_at + self.deadline_s
 
     @property
     def done(self) -> bool:
         return self.state is TicketState.DONE
 
-    def result(self):
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the ticket is terminal (DONE or FAILED); returns
+        True when it is, False on timeout. The call that makes the
+        background loop usable: submit -> wait -> result."""
+        return self._done_event.wait(timeout)
+
+    def _set_state(self, state: TicketState, *, volume=None,
+                   error: Optional[BaseException] = None) -> bool:
+        """Thread-safe transition (scheduler-internal). Terminal states are
+        sticky: once DONE/FAILED, only another terminal state may overwrite
+        (the write-behind store-failure flip DONE -> FAILED). Returns
+        whether the transition was applied; fires the done event on
+        reaching a terminal state."""
+        with self._state_lock:
+            if self.state in TERMINAL_STATES and state not in TERMINAL_STATES:
+                return False
+            if volume is not None:
+                self.volume = volume
+            if error is not None:
+                self.error = error
+            self.state = state
+        if state in TERMINAL_STATES:
+            self._done_event.set()
+        return True
+
+    def result(self, timeout: Optional[float] = None):
         """The reconstructed volume; raises the bucket's error for FAILED
-        tickets and RuntimeError when the scan has not been served yet."""
+        tickets and RuntimeError when the scan has not been served yet.
+        `timeout` waits for a terminal state first (background-loop
+        callers); the default stays non-blocking for the synchronous
+        drain() flow."""
+        if timeout is not None:
+            self.wait(timeout)
         if self.state is TicketState.FAILED:
             raise RuntimeError(
                 f"scan {self.scan_id!r} failed to reconstruct"
@@ -92,17 +161,20 @@ class ScanTicket:
         if self.state is not TicketState.DONE:
             raise RuntimeError(
                 f"scan {self.scan_id!r} is {self.state.value}; call "
-                "ReconstructionService.drain() to serve queued scans")
+                "ReconstructionService.drain() (or serve() the background "
+                "loop and ticket.wait()) to serve queued scans")
         return self.volume
 
 
 @dataclasses.dataclass
 class _QueuedScan:
     """Internal queue entry: the ticket plus how to obtain its projections
-    (exactly one of `projections` / `source` is set) and where to store the
-    result (optional sink)."""
+    (exactly one of `projections` / `source` is set), where to store the
+    result (optional sink), and the admission sequence number `seq` — the
+    arrival-order key the scheduling policies tie-break on."""
 
     ticket: ScanTicket
     projections: Optional[object] = None
     source: Optional[object] = None          # io.streams.ProjectionSource
     sink: Optional[object] = None            # io.streams.VolumeSink
+    seq: int = 0

@@ -266,6 +266,44 @@ class TestFailureIsolation:
         assert st["failed"] == 1 and st["served"] == 1
         svc.close()
 
+    def test_bucket_construction_failure_fails_only_its_family(
+            self, case16):
+        """REGRESSION (ISSUE 9): _make_buckets used to swap the queue out
+        and THEN resolve each family's plan — a resolve/capacity exception
+        unwound drain() with every pending ticket (all families) already
+        out of the queue, silently stuck in QUEUED forever with no error
+        recorded. Now the failing family's tickets FAIL (error set,
+        counted) and the other families still serve."""
+        g, scans = case16
+        svc = ReconstructionService()
+        ta1 = svc.submit(projections=scans[0], geometry=g)
+        ta2 = svc.submit(projections=scans[1], geometry=g)
+        tb = svc.submit(projections=scans[2], geometry=g, precision="bf16")
+        real_resolve = svc.plan_cache.resolve
+
+        def poisoned(family):
+            if family == ta1.family:
+                raise RuntimeError("poisoned plan cache")
+            return real_resolve(family)
+
+        svc.plan_cache.resolve = poisoned
+        served = svc.drain()
+        svc.plan_cache.resolve = real_resolve
+        # nothing lost: all three tickets came back, all terminal
+        assert {t.scan_id for t in served} == {ta1.scan_id, ta2.scan_id,
+                                               tb.scan_id}
+        assert ta1.state is TicketState.FAILED
+        assert ta2.state is TicketState.FAILED
+        assert "poisoned" in str(ta1.error) and "poisoned" in str(ta2.error)
+        assert tb.state is TicketState.DONE
+        ref = plan_from_spec(g, "auto", precision="bf16").build()(scans[2])
+        np.testing.assert_array_equal(np.asarray(tb.result()),
+                                      np.asarray(ref))
+        st = svc.stats()
+        assert st["failed"] == 2 and st["served"] == 1
+        assert st["queued"] == 0
+        svc.close()
+
     def test_failed_load_fails_only_its_bucket(self, case16, tmp_path):
         """A source whose load raises fails its own bucket's tickets with
         PrefetchError; later buckets still serve from their own data."""
@@ -338,6 +376,58 @@ class TestPrefetcher:
             pf.get()
         pf.close()
 
+    def test_get_after_exhaustion_raises_idempotently(self):
+        """REGRESSION (ISSUE 9): the DONE sentinel was consumed exactly
+        once, so a second get() after exhaustion blocked forever on the
+        empty queue. Exhaustion is now latched — every later get() raises
+        StopIteration again."""
+        pf = SourcePrefetcher([lambda: 1]).start()
+        assert pf.get() == 1
+        for _ in range(3):            # pre-fix: the second of these hung
+            with pytest.raises(StopIteration):
+                pf.get()
+        pf.close()
+
+    def test_get_after_close_raises_stopiteration(self):
+        """close() abandons pending jobs; a straggler consumer must get a
+        clean StopIteration, not a deadlock (the worker's DONE put gives
+        up once close() is requested)."""
+        release = threading.Event()
+
+        def slow():
+            release.wait(5.0)
+            return 1
+
+        pf = SourcePrefetcher([slow, lambda: 2], depth=1).start()
+        release.set()
+        assert pf.get() == 1
+        pf.close()
+        for _ in range(2):
+            with pytest.raises(StopIteration):
+                pf.get()
+
+    def test_persistent_mode_extends_across_batches(self):
+        """Serve-loop reuse: one worker thread serves several extend()
+        batches (no per-drain prefetcher churn), DONE only on finish()."""
+        pf = SourcePrefetcher(depth=2, persistent=True).start()
+        pf.extend([lambda: "a", lambda: "b"])
+        assert [pf.get(), pf.get()] == ["a", "b"]
+        pf.extend([lambda: "c"])      # same worker, second drain pass
+        assert pf.get() == "c"
+        pf.finish()
+        with pytest.raises(StopIteration):
+            pf.get()
+        with pytest.raises(RuntimeError, match="finished"):
+            pf.extend([lambda: "d"])
+        pf.close()
+
+    def test_one_shot_prefetcher_rejects_extend(self):
+        pf = SourcePrefetcher([lambda: 1])
+        with pytest.raises(RuntimeError, match="finished"):
+            pf.extend([lambda: 2])
+        assert pf.get() == 1
+        pf.close()
+
 
 class TestWriteback:
     def test_drain_reraises_first_failure(self, tmp_path):
@@ -399,6 +489,330 @@ class TestWriteback:
         assert wb.drain() >= 1
         assert len(wrote) == 2      # both writes ran
         wb.close()
+
+
+class TestServeLoop:
+    """The background drain loop (ISSUE 9 tentpole): serve()/shutdown()
+    lifecycle, condition-variable wakeup, caller wait()/result(), and the
+    loop surviving failures."""
+
+    def test_serve_shutdown_roundtrip(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(max_batch=4).serve()
+        assert svc.serving
+        tickets = [svc.submit(projections=p, geometry=g) for p in scans]
+        for t in tickets:
+            assert t.wait(timeout=60.0), t.state
+        assert all(t.done for t in tickets)
+        ref = plan_from_spec(g, "auto").build()
+        np.testing.assert_array_equal(np.asarray(ref(scans[0])),
+                                      np.asarray(tickets[0].result()))
+        svc.shutdown()
+        assert not svc.serving
+        st = svc.stats()
+        assert st["served"] == len(scans) and st["queued"] == 0
+        assert st["loop"]["passes"] >= 1 and st["loop"]["errors"] == 0
+        svc.close()
+
+    def test_shutdown_drains_queued_work_first(self, case16):
+        """Graceful shutdown: scans admitted before shutdown() are served,
+        never stranded non-terminal."""
+        g, scans = case16
+        svc = ReconstructionService(max_batch=8)
+        tickets = [svc.submit(projections=p, geometry=g) for p in scans]
+        svc.serve()
+        svc.shutdown()            # must serve the queue before exiting
+        assert all(t.terminal for t in tickets)
+        assert all(t.done for t in tickets)
+        svc.close()
+
+    def test_serve_is_idempotent_and_restartable(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        svc.serve()
+        first = svc._serve_thread
+        svc.serve()                          # idempotent: same thread
+        assert svc._serve_thread is first
+        svc.shutdown()
+        svc.serve()                          # restartable after shutdown
+        t = svc.submit(projections=scans[0], geometry=g)
+        assert t.wait(timeout=60.0)
+        svc.shutdown()
+        svc.close()
+
+    def test_drain_while_serving_raises(self, case16):
+        g, scans = case16
+        svc = ReconstructionService().serve()
+        with pytest.raises(RuntimeError, match="serve"):
+            svc.drain()
+        svc.shutdown()
+        svc.drain()                          # fine once the loop is down
+        svc.close()
+
+    def test_ticket_wait_and_result_timeout(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        t = svc.submit(projections=scans[0], geometry=g)
+        assert not t.wait(timeout=0.02)      # nothing serving yet
+        with pytest.raises(RuntimeError, match="queued"):
+            t.result(timeout=0.02)
+        svc.serve()
+        assert t.wait(timeout=60.0)
+        t.result(timeout=60.0)
+        svc.shutdown()
+        svc.close()
+
+    def test_loop_keeps_serving_after_a_failed_bucket(self, case16):
+        """Graceful degradation: a failing load fails its own ticket and
+        the loop stays alive to serve what comes next."""
+        g, scans = case16
+
+        class ExplodingSource:
+            def load(self, mesh=None):
+                raise IOError("bad shard")
+
+        svc = ReconstructionService().serve()
+        bad = svc.submit(source=ExplodingSource(), geometry=g)
+        assert bad.wait(timeout=60.0)
+        assert bad.state is TicketState.FAILED
+        assert isinstance(bad.error, PrefetchError)
+        good = svc.submit(projections=scans[0], geometry=g)
+        assert good.wait(timeout=60.0)
+        assert good.done
+        assert svc.serving
+        svc.shutdown()
+        st = svc.stats()
+        assert st["served"] == 1 and st["failed"] == 1
+        assert st["loop"]["errors"] == 0     # bucket isolation, not a crash
+        svc.close()
+
+    def test_queue_full_backpressure_fires_under_loop(self, case16):
+        """QueueFullError still protects the queue while the loop serves:
+        block the loop on a slow load, fill the queue, next submit is
+        rejected."""
+        g, scans = case16
+        release = threading.Event()
+
+        class SlowSource:
+            def load(self, mesh=None):
+                release.wait(10.0)
+                return np.asarray(scans[0])
+
+        svc = ReconstructionService(max_queue=2).serve()
+        slow = svc.submit(source=SlowSource(), geometry=g)
+        # wait until the loop has snapshotted `slow` out of the queue and
+        # is blocked on its load — then the queue is empty and ours alone
+        deadline = time.monotonic() + 5.0
+        while ((svc.queued or slow.state is TicketState.QUEUED)
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        assert slow.state is not TicketState.QUEUED
+        queued = [svc.submit(projections=scans[1], geometry=g)
+                  for _ in range(2)]            # fills max_queue=2
+        with pytest.raises(QueueFullError):
+            svc.submit(projections=scans[2], geometry=g)
+        release.set()
+        for t in [slow] + queued:
+            assert t.wait(timeout=60.0)
+        svc.shutdown()
+        st = svc.stats()
+        assert st["rejected"] >= 1
+        assert st["submitted"] == st["served"] + st["failed"] == 3
+        svc.close()
+
+    def test_concurrent_submitters_race_the_loop(self, case16):
+        """ISSUE 9 headline test: N threads submit against the running
+        loop. No ticket is lost, duplicated, or left non-terminal, and
+        submitted == served + failed (+ rejected on the submit side) at
+        shutdown."""
+        g, scans = case16
+        n_threads, per_thread = 4, 6
+        svc = ReconstructionService(max_batch=4, max_queue=8).serve()
+        tickets, rejected = [], []
+        lock = threading.Lock()
+
+        def submitter(tid):
+            for k in range(per_thread):
+                while True:
+                    try:
+                        t = svc.submit(projections=scans[k % len(scans)],
+                                       geometry=g,
+                                       scan_id=f"t{tid}-{k}")
+                    except QueueFullError:
+                        with lock:
+                            rejected.append(1)
+                        time.sleep(0.005)     # backpressure: retry
+                        continue
+                    with lock:
+                        tickets.append(t)
+                    break
+
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120.0)
+        assert not any(th.is_alive() for th in threads)
+        for t in tickets:
+            assert t.wait(timeout=120.0), t.state
+        svc.shutdown()
+        # no ticket lost or duplicated
+        assert len(tickets) == n_threads * per_thread
+        assert len({t.scan_id for t in tickets}) == len(tickets)
+        # every ticket terminal, every volume present
+        assert all(t.terminal for t in tickets)
+        assert all(t.done and t.volume is not None for t in tickets)
+        st = svc.stats()
+        assert st["submitted"] == len(tickets)
+        assert st["submitted"] == st["served"] + st["failed"]
+        assert st["rejected"] == len(rejected)
+        assert st["queued"] == 0
+        ref = plan_from_spec(g, "auto").build()
+        np.testing.assert_array_equal(
+            np.asarray(ref(scans[0])),
+            np.asarray(next(t for t in tickets
+                            if t.scan_id == "t0-0").result()))
+        svc.close()
+
+
+class TestSchedulingPolicies:
+    """Cross-family bucket ordering (`policy=`): drain() returns tickets
+    in execution order, which is what these assertions read."""
+
+    def test_invalid_policy_rejected(self):
+        with pytest.raises(ValueError, match="policy"):
+            ReconstructionService(policy="sjf")
+
+    def test_deadline_policy_reorders_ahead_of_fifo(self, case16):
+        """ISSUE 9 acceptance: EDF serves the urgent family first even
+        though the lax one arrived first; fifo keeps arrival order."""
+        g, scans = case16
+
+        def submit_mixed(svc):
+            lax = svc.submit(projections=scans[0], geometry=g,
+                             deadline_s=100.0)
+            urgent = svc.submit(projections=scans[1], geometry=g,
+                                precision="bf16", deadline_s=0.5)
+            return lax, urgent
+
+        svc = ReconstructionService(policy="deadline")
+        lax, urgent = submit_mixed(svc)
+        order = [t.scan_id for t in svc.drain()]
+        assert order == [urgent.scan_id, lax.scan_id]
+        svc.close()
+
+        svc = ReconstructionService(policy="fifo")
+        lax, urgent = submit_mixed(svc)
+        order = [t.scan_id for t in svc.drain()]
+        assert order == [lax.scan_id, urgent.scan_id]
+        svc.close()
+
+    def test_deadline_less_buckets_run_last_in_arrival_order(self, case16):
+        g, scans = case16
+        svc = ReconstructionService(policy="deadline")
+        plain = svc.submit(projections=scans[0], geometry=g)
+        slo = svc.submit(projections=scans[1], geometry=g,
+                         precision="bf16", deadline_s=5.0)
+        order = [t.scan_id for t in svc.drain()]
+        assert order == [slo.scan_id, plain.scan_id]
+        svc.close()
+
+    def test_largest_bucket_policy_maximizes_occupancy_first(self, case16):
+        g, scans = case16
+
+        def submit_mixed(svc):
+            small = [svc.submit(projections=scans[0], geometry=g)]
+            big = [svc.submit(projections=p, geometry=g, precision="bf16")
+                   for p in scans[1:4]]
+            return small, big
+
+        svc = ReconstructionService(max_batch=4, policy="largest_bucket")
+        small, big = submit_mixed(svc)
+        order = [t.scan_id for t in svc.drain()]
+        assert order == [t.scan_id for t in big + small]
+        svc.close()
+
+        svc = ReconstructionService(max_batch=4, policy="fifo")
+        small, big = submit_mixed(svc)
+        order = [t.scan_id for t in svc.drain()]
+        assert order == [t.scan_id for t in small + big]
+        svc.close()
+
+    def test_fifo_round_robin_is_fair_across_families(self, case16):
+        """A chatty family (3 buckets queued) cannot starve a quiet one:
+        round-robin serves the quiet family's bucket in round one, not
+        after the whole backlog."""
+        g, scans = case16
+        svc = ReconstructionService(max_batch=2, policy="fifo")
+        chatty = [svc.submit(projections=scans[k % len(scans)], geometry=g)
+                  for k in range(5)]                  # buckets: 2 + 2 + 1
+        quiet = svc.submit(projections=scans[0], geometry=g,
+                           precision="bf16")          # arrives LAST
+        order = [t.scan_id for t in svc.drain()]
+        expect = [chatty[0].scan_id, chatty[1].scan_id,   # A bucket 1
+                  quiet.scan_id,                          # B bucket 1 (!)
+                  chatty[2].scan_id, chatty[3].scan_id,   # A bucket 2
+                  chatty[4].scan_id]                      # A bucket 3
+        assert order == expect
+        assert all(t.done for t in chatty + [quiet])
+        svc.close()
+
+
+class TestSLO:
+    def test_met_and_missed_counters(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        met = svc.submit(projections=scans[0], geometry=g, deadline_s=60.0)
+        missed = svc.submit(projections=scans[1], geometry=g,
+                            deadline_s=0.0)   # already due at submit
+        nolo = svc.submit(projections=scans[2], geometry=g)
+        svc.drain()
+        assert met.done and missed.done and nolo.done
+        st = svc.stats()["slo"]
+        assert st == {"met": 1, "missed": 1, "attainment": 0.5}
+        svc.close()
+
+    def test_no_deadlines_means_no_attainment(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        svc.submit(projections=scans[0], geometry=g)
+        svc.drain()
+        assert svc.stats()["slo"] == {"met": 0, "missed": 0,
+                                      "attainment": None}
+        svc.close()
+
+    def test_failed_ticket_with_deadline_counts_missed(self, case16):
+        g, _ = case16
+
+        class ExplodingSource:
+            def load(self, mesh=None):
+                raise IOError("bad shard")
+
+        svc = ReconstructionService()
+        t = svc.submit(source=ExplodingSource(), geometry=g,
+                       deadline_s=60.0)
+        svc.drain()
+        assert t.state is TicketState.FAILED
+        assert svc.stats()["slo"]["missed"] == 1
+        svc.close()
+
+    def test_negative_deadline_rejected(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        with pytest.raises(AdmissionError, match="deadline_s"):
+            svc.submit(projections=scans[0], geometry=g, deadline_s=-1.0)
+        assert svc.stats()["rejected"] == 1
+        svc.close()
+
+    def test_ticket_deadline_is_absolute(self, case16):
+        g, scans = case16
+        svc = ReconstructionService()
+        t = svc.submit(projections=scans[0], geometry=g, deadline_s=30.0)
+        assert t.deadline == pytest.approx(t.submitted_at + 30.0)
+        plain = svc.submit(projections=scans[1], geometry=g)
+        assert plain.deadline is None
+        svc.close()
 
 
 class TestScanFamily:

@@ -299,6 +299,27 @@ class TestStreamingStore:
     def test_poll_missing_store_is_empty(self, tmp_path):
         assert ProjectionSource(str(tmp_path / "nowhere")).poll() == []
 
+    def test_iter_deltas_early_break_is_not_rereported(self, geo, proj,
+                                                       tmp_path):
+        """REGRESSION (ISSUE 9): consumed used to be marked AFTER the
+        yield, so a consumer that broke out of iter_deltas (the delta
+        already delivered and folded) closed the generator before the
+        mark ran — the next poll() re-reported the folded range and the
+        session's coverage bitmap rejected it as an overlap."""
+        path = str(tmp_path / "proj")
+        w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u))
+        w.append(proj[:4], 0)
+        w.append(proj[8:12], 8)
+        src = ProjectionSource(path)
+        for lo, hi, delta in src.iter_deltas():
+            assert (lo, hi) == (0, 4)
+            np.testing.assert_array_equal(np.asarray(delta), proj[:4])
+            break                  # consumer bails between deltas
+        # the delivered range is consumed; only the second one remains
+        assert src.poll() == [(8, 12)]
+        assert [(lo, hi) for lo, hi, _ in src.iter_deltas()] == [(8, 12)]
+        assert src.poll() == []
+
     def test_load_slice_matches_source(self, geo, proj, tmp_path):
         path = str(tmp_path / "proj")
         w = StreamingProjectionWriter(path, (16, geo.n_v, geo.n_u))
