@@ -53,7 +53,8 @@ import numpy as np
 # root) on sys.path; make the documented direct invocation work.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.bench_streaming import _interleaved_best, write_json
+from benchmarks.bench_streaming import _interleaved_best, flatten_rows, \
+    write_json
 from repro.core.geometry import default_geometry
 from repro.core.phantom import forward_project
 from repro.core.plan import clear_engine_cache, plan_from_spec
@@ -121,9 +122,12 @@ def _time_serve_loop(g, scans, iters: int, deadline_s: float,
 
 
 def run(iters: int = 5, fast: bool = False, policy: str = "deadline"):
-    rows = []
+    """Yield one LIST of rows per case (a case group) so the driver
+    (run.py --json) can snapshot the stage tracer around each case and
+    record per-case t_stage deltas (bench_streaming.run's convention)."""
     cases = [(32, 64, 4)] if fast else [(32, 64, 4), (48, 96, 8)]
     for n, npj, bucket in cases:
+        rows = []
         g = default_geometry(n, n_proj=npj)
         base = jnp.asarray(forward_project(g))
         # distinct same-geometry scans (one family, different data)
@@ -206,7 +210,7 @@ def run(iters: int = 5, fast: bool = False, policy: str = "deadline"):
             f"ttv_max_us={(ttv_loop['max'] or 0.0) * 1e6:.0f} "
             f"{'OK' if (attain or 0.0) >= 0.99 else 'MISS'}",
         ))
-    return rows
+        yield rows
 
 
 def main(argv=None) -> None:
@@ -226,7 +230,8 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help=f"persist rows as JSON (default {JSON_PATH})")
     args = ap.parse_args(argv)
-    rows = run(iters=args.iters, fast=args.fast, policy=args.policy)
+    rows = flatten_rows(run(iters=args.iters, fast=args.fast,
+                            policy=args.policy))
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

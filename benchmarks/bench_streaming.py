@@ -96,13 +96,17 @@ def _make_last_delta_fn(plan, proj, n_steps: int):
 
 
 def run(iters: int = 7, fast: bool = False):
-    rows = []
+    """Yield one LIST of rows per case (a case group): the driver
+    (run.py --json) snapshots the stage tracer around each yielded group,
+    so every case gets its own t_stage delta instead of the whole suite's
+    cumulative totals. Flatten for the flat-row view (see main())."""
     # Small volumes are dispatch-overhead-bound: the one launch t_last pays
     # but the batch plan amortizes across its whole scan costs ~100us+,
     # which swamps the streaming margin below ~32^3. The fast case starts
     # where the fold does real work.
     cases = [(32, 64, 4)] if fast else [(32, 64, 4), (48, 96, 4)]
     for n, npj, n_steps in cases:
+        rows = []
         g = default_geometry(n, n_proj=npj)
         proj = np.asarray(forward_project(g))
         label = f"streaming/{n}^3x{npj}"
@@ -134,7 +138,14 @@ def run(iters: int = 7, fast: bool = False):
             f"model_abci={modeled * 1e6:.1f}us "
             f"{'OK' if t_last < budget else 'MISS'}",
         ))
-    return rows
+        yield rows
+
+
+def flatten_rows(groups):
+    """Flat (name, us, derived) rows from a run() that may yield case
+    groups (lists) and/or bare row tuples."""
+    return [row for item in groups
+            for row in (item if isinstance(item, list) else [item])]
 
 
 def main(argv=None) -> None:
@@ -147,7 +158,7 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help=f"persist rows as JSON (default {JSON_PATH})")
     args = ap.parse_args(argv)
-    rows = run(iters=args.iters, fast=args.fast)
+    rows = flatten_rows(run(iters=args.iters, fast=args.fast))
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
@@ -156,16 +167,28 @@ def main(argv=None) -> None:
         print(f"# wrote {args.json}")
 
 
-def write_json(path: str, rows, t_stage=None) -> None:
+def write_json(path: str, rows, t_stage=None, row_stages=None) -> None:
     """Persist benchmark rows as the PR-over-PR trajectory file.
 
-    `t_stage` (optional dict of span name -> total seconds, from
-    `Tracer.stage_totals`) attaches the suite's traced stage breakdown to
-    every row — where the suite's wall time actually went, by pipeline
-    stage (repro/obs)."""
-    payload = [{"name": name, "us_per_call": us, "derived": derived,
-                **({"t_stage": t_stage} if t_stage else {})}
-               for name, us, derived in rows]
+    `row_stages` (optional list parallel to `rows`, of dicts span name ->
+    seconds) attaches each row's OWN per-case stage delta — the driver
+    (run.py --json) snapshots `Tracer.stage_totals` around each case group
+    so a row's t_stage is what that case actually spent, not the whole
+    run's cumulative totals. `t_stage` is the suite-level cumulative
+    breakdown: with `row_stages` present it is appended as one trailing
+    ``suite_total`` record; without (the legacy call shape) it is attached
+    to every row unchanged."""
+    payload = []
+    for i, (name, us, derived) in enumerate(rows):
+        rec = {"name": name, "us_per_call": us, "derived": derived}
+        if row_stages is not None:
+            if i < len(row_stages) and row_stages[i]:
+                rec["t_stage"] = row_stages[i]
+        elif t_stage:
+            rec["t_stage"] = t_stage
+        payload.append(rec)
+    if row_stages is not None and t_stage:
+        payload.append({"name": "suite_total", "t_stage": t_stage})
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")

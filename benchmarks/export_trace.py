@@ -1,4 +1,4 @@
-"""Traced-reconstruction smoke: produce and VALIDATE a Perfetto trace.
+"""Traced-reconstruction smoke: produce, VALIDATE, and drift-check a trace.
 
 The CI fast tier runs this on a 16^3 auto-planned reconstruction (source ->
 traced engine -> sink) and uploads the trace JSON as a workflow artifact —
@@ -8,6 +8,8 @@ the run fails if the trace is malformed or any engine stage went dark:
     python benchmarks/export_trace.py --out trace_ci.json
     python benchmarks/export_trace.py --out t.json --n 32 --plan \
         "schedule=pipelined,n_steps=2"
+    python benchmarks/export_trace.py --iters 4 \
+        --check-drift benchmarks/drift_baseline.json
 
 Validation (exit nonzero on any miss):
   * the file parses as Chrome/Perfetto ``trace_event`` JSON;
@@ -16,7 +18,26 @@ Validation (exit nonzero on any miss):
   * `attribution.compare` yields a row for every PerfBreakdown stage and
     every nonzero-predicted stage was measured.
 
-Prints the predicted-vs-measured attribution report to stdout.
+``--iters N`` repeats the traced run N times; every run deposits its
+per-stage timings into the process-default CalibrationStore
+(planner/calibrate.py), so the samples survive compile-warmup outlier
+rejection (the first run's spans include jit compilation).
+
+``--check-drift [BASELINE]`` is the drift alarm (ISSUE: close the
+predicted->measured loop): fit the calibration overlay from the runs just
+recorded (a hermetic per-invocation store — never the user's cache), price
+the SAME trace with the stock model and with the fitted overlay, and
+compare the time-weighted aggregate model errors
+(obs.attribution.aggregate_error) against the committed baseline:
+
+  * the fit must produce a non-empty overlay (enough samples per stage);
+  * calibrated aggregate error must be <= baseline["calibrated_max"];
+  * when the stock error exceeds baseline["stock_floor_for_drop"], the
+    calibrated error must be strictly below the stock error — the whole
+    point of the loop is that fitting HELPS.
+
+Prints the stock and calibrated predicted-vs-measured attribution reports
+to stdout; exits nonzero on any validation or drift failure.
 """
 from __future__ import annotations
 
@@ -30,17 +51,19 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 REQUIRED_KEYS = {"ph", "ts", "dur", "name", "pid", "tid"}
 
+DRIFT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "drift_baseline.json")
 
-def run_traced(n: int, n_proj: int, spec: str, out_path: str) -> dict:
-    """One traced source->engine->sink reconstruction; saves and returns
-    the exported trace object."""
+
+def setup_problem(n: int, n_proj: int, spec: str):
+    """(plan, source, sink) for the smoke geometry — resolved ONCE so every
+    --iters repetition runs the identical plan (an accumulating calibration
+    store must not flip the auto-planner's pick mid-loop)."""
     import numpy as np
-    from repro import obs
     from repro.core.geometry import default_geometry
     from repro.core.phantom import forward_project
     from repro.core.plan import plan_from_spec
     from repro.io import ProjectionSource, VolumeSink
-    from repro.obs.trace import Tracer, set_tracer
 
     g = default_geometry(n, n_proj=n_proj)
     proj = np.asarray(forward_project(g))
@@ -48,19 +71,29 @@ def run_traced(n: int, n_proj: int, spec: str, out_path: str) -> dict:
     src = ProjectionSource.write(os.path.join(tmp, "proj"), proj,
                                  chunks=(1, 1, 1))
     sink = VolumeSink(os.path.join(tmp, "vol"))
-    plan = plan_from_spec(g, spec)
+    return plan_from_spec(g, spec), src, sink
+
+
+def run_traced(plan, src, sink, out_path: str, quiet: bool = False) -> dict:
+    """One traced source->engine->sink reconstruction on a FRESH tracer;
+    saves and returns the exported trace object. Each call deposits its
+    stage timings into the default CalibrationStore (build_traced's
+    record hook fires when the tracer is enabled)."""
+    from repro import obs
+    from repro.obs.trace import Tracer, set_tracer
+
     prev = set_tracer(Tracer(enabled=True))
     try:
         fdk = plan.build_traced(source=src, sink=sink)
         fdk()
         tracer = obs.get_tracer()
         tracer.save(out_path)
-        report = obs.attribution.render_report(
-            obs.attribution.compare(plan, tracer))
+        if not quiet:
+            print(f"plan: {plan.describe()}")
+            print(obs.attribution.render_report(
+                obs.attribution.compare(plan, tracer)))
     finally:
         set_tracer(prev)
-    print(f"plan: {plan.describe()}")
-    print(report)
     return json.load(open(out_path))
 
 
@@ -85,6 +118,53 @@ def validate(trace: dict) -> list:
     return failures
 
 
+def check_drift(plan, trace, store, baseline_path: str) -> list:
+    """The drift alarm: stock vs calibrated aggregate model error on the
+    same trace, gated by the committed baseline. Returns failure strings
+    (empty = healthy); prints both attribution tables."""
+    from repro.obs.attribution import aggregate_error, compare, render_report
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    cal = store.fit()
+    if cal.is_empty:
+        return [f"calibration fit is empty after "
+                f"{store.n_samples()} recorded samples — not enough "
+                f"per-stage evidence to close the loop (raise --iters?)"]
+
+    rows_stock = compare(plan, trace)
+    rows_cal = compare(plan, trace, calibration=cal)
+    e_stock = aggregate_error(rows_stock)
+    e_cal = aggregate_error(rows_cal)
+    print(f"\ncalibration: {cal.summary()}")
+    print("\n-- stock model --")
+    print(render_report(rows_stock))
+    print("\n-- calibrated model --")
+    print(render_report(rows_cal))
+    fmt = lambda e: "-" if e is None else f"{e:.4f}"
+    print(f"\naggregate model error: stock={fmt(e_stock)} "
+          f"calibrated={fmt(e_cal)} "
+          f"(baseline calibrated_max={baseline['calibrated_max']})")
+
+    failures = []
+    if e_cal is None:
+        failures.append("calibrated attribution has no measurable rows")
+        return failures
+    if e_cal > baseline["calibrated_max"]:
+        failures.append(
+            f"calibrated aggregate model error {e_cal:.4f} exceeds "
+            f"baseline calibrated_max={baseline['calibrated_max']} — the "
+            f"fitted overlay no longer explains this host's measurements")
+    floor = baseline.get("stock_floor_for_drop", 0.0)
+    if e_stock is not None and e_stock > floor and e_cal >= e_stock:
+        failures.append(
+            f"calibration did not improve on the stock model "
+            f"(stock={e_stock:.4f}, calibrated={e_cal:.4f}) although stock "
+            f"error is above the {floor} floor — the fit is not closing "
+            f"the predicted->measured loop")
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="traced-reconstruction smoke + trace validation")
@@ -96,17 +176,49 @@ def main(argv=None) -> None:
                     help="projection count (default 8)")
     ap.add_argument("--plan", default="auto", metavar="SPEC",
                     help="plan spec (default 'auto': planner search)")
+    ap.add_argument("--iters", type=int, default=1,
+                    help="traced-run repetitions feeding the calibration "
+                         "store (default 1; >=4 recommended with "
+                         "--check-drift so compile warmup is rejected as "
+                         "an outlier)")
+    ap.add_argument("--check-drift", nargs="?", const=DRIFT_BASELINE,
+                    default=None, metavar="BASELINE",
+                    help="fit a calibration from the recorded runs and "
+                         "fail if its aggregate model error regresses "
+                         f"past the committed baseline (default "
+                         f"{DRIFT_BASELINE})")
     args = ap.parse_args(argv)
 
-    trace = run_traced(args.n, args.n_proj, args.plan, args.out)
+    store = None
+    if args.check_drift is not None:
+        # Hermetic per-invocation store: the drift verdict must come from
+        # THIS run's samples, not whatever the user's cache accumulated.
+        from repro.filecache import JsonFileCache
+        from repro.planner.calibrate import CalibrationStore, \
+            set_default_store
+        store_path = os.path.join(
+            tempfile.mkdtemp(prefix="repro-drift-"), "store.json")
+        store = CalibrationStore(cache=JsonFileCache(
+            "REPRO_CALIB_CACHE", "calibration_store.json", path=store_path))
+        set_default_store(store)
+
+    plan, src, sink = setup_problem(args.n, args.n_proj, args.plan)
+    trace = None
+    for i in range(max(1, args.iters)):
+        last = i == max(1, args.iters) - 1
+        trace = run_traced(plan, src, sink, args.out, quiet=not last)
+
     failures = validate(trace)
+    if not failures and args.check_drift is not None:
+        failures = check_drift(plan, trace, store, args.check_drift)
     n_spans = sum(1 for e in trace["traceEvents"] if e.get("ph") == "X")
     if failures:
         for f in failures:
             print(f"TRACE INVALID: {f}", file=sys.stderr)
         sys.exit(1)
+    drift = "" if args.check_drift is None else ", drift check passed"
     print(f"trace OK: {args.out} ({n_spans} spans, all engine stages "
-          "covered)")
+          f"covered{drift})")
 
 
 if __name__ == "__main__":

@@ -9,20 +9,80 @@ builds by hand in §4.2/Table 5, produced by `repro.planner.search_grids`.
         --hbm-gib 16 --system abci --top-k 12 --all
     PYTHONPATH=src python benchmarks/plan_search.py --local --measure
         # buildable single-device plans, top-3 timed for real
+    PYTHONPATH=src python benchmarks/plan_search.py --local --calibrated \
+        --measure --save-overlay overlay.json
+        # seed a calibration from traced runs, re-rank with the fitted
+        # overlay, report stock-vs-calibrated attribution + model error
 
-Also runnable as a `benchmarks/run.py` suite (``--suite plan_search``).
+Also runnable as a `benchmarks/run.py` suite (``--suite plan_search``) —
+the suite additionally emits ranking-quality rows (was the stock / the
+calibrated top-1 the measured-best plan?) into BENCH_plan_search.json.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
 
 from repro.core.geometry import default_geometry, paper_geometry
 from repro.core.perf_model import ABCI, TPU_V5E
-from repro.planner import search_grids, search_plans
+from repro.planner import admitted_impls, search_grids, search_plans
 from repro.planner.cost import allgather_wire_bytes, reduce_wire_bytes
-from repro.planner.measure import refine
+from repro.planner.measure import measure_proposal, refine
 
 _SYSTEMS = {"abci": ABCI, "tpu": TPU_V5E}
+
+
+def seed_calibration(g, proposals, system=ABCI, iters: int = 3,
+                     top_k: int = 3):
+    """Fit a MachineCalibration from traced runs of the leading buildable
+    proposals, recorded into a HERMETIC per-invocation store (never the
+    user's REPRO_CALIB_CACHE file — the report must reflect these runs).
+
+    Returns (calibration, store, last_tracer) where last_tracer holds the
+    final traced run of the top proposal (attribution report input).
+    Incremental-schedule proposals are skipped: `build_traced` hands those
+    back as sessions, and their per-delta stage timings flow into the
+    default store during real streaming use instead."""
+    from repro.filecache import JsonFileCache
+    from repro.obs.trace import Tracer, set_tracer
+    from repro.planner.calibrate import CalibrationStore, set_default_store
+
+    store = CalibrationStore(cache=JsonFileCache(
+        "REPRO_CALIB_CACHE", "calibration_store.json",
+        path=os.path.join(tempfile.mkdtemp(prefix="repro-cal-"),
+                          "store.json")))
+    prev_store = set_default_store(store)
+    last_tracer = None
+    try:
+        proj = np.asarray(np.zeros(g.proj_shape(), np.float32))
+        seeded = 0
+        for p in proposals:
+            if seeded >= top_k:
+                break
+            if p.plan is None or p.point.schedule == "incremental":
+                continue
+            seeded += 1
+            fdk = p.plan.build_traced()
+            for _ in range(max(1, iters)):
+                prev = set_tracer(Tracer(enabled=True))
+                try:
+                    jax.block_until_ready(fdk(proj))
+                    if seeded == 1:
+                        from repro.obs.trace import get_tracer
+                        last_tracer = get_tracer()
+                finally:
+                    set_tracer(prev)
+    finally:
+        set_default_store(prev_store)
+    return store.fit(system=system), store, last_tracer
 
 
 def _fmt_row(i, p, g):
@@ -103,10 +163,28 @@ def main(argv=None) -> None:
     ap.add_argument("--measure", action="store_true",
                     help="with --local: time the top-3 built engines and "
                          "re-rank by wall clock")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="with --local: fit a calibration overlay from "
+                         "traced runs of the leading stock proposals, "
+                         "re-rank with it, and print the stock-vs-"
+                         "calibrated attribution report + aggregate model "
+                         "error (planner/calibrate.py)")
+    ap.add_argument("--cal-iters", type=int, default=4,
+                    help="traced runs per seeded proposal for --calibrated "
+                         "(default 4: enough to reject compile warmup)")
+    ap.add_argument("--save-overlay", default=None, metavar="PATH",
+                    help="with --calibrated: write the fitted "
+                         "MachineCalibration as JSON (nightly CI artifact)")
     args = ap.parse_args(argv)
     if args.measure and not args.local:
         ap.error("--measure times built engines and needs --local "
                  "(grid-only projections have nothing to build)")
+    if args.calibrated and not args.local:
+        ap.error("--calibrated fits from traced runs of built engines and "
+                 "needs --local")
+    if args.save_overlay and not args.calibrated:
+        ap.error("--save-overlay needs --calibrated (nothing fitted "
+                 "otherwise)")
 
     system = _SYSTEMS[args.system]
     for flag, value in [("--pfs-read-gbs", args.pfs_read_gbs),
@@ -146,9 +224,53 @@ def main(argv=None) -> None:
     for i, p in enumerate(proposals):
         print(_fmt_row(i, p, g))
 
+    if args.calibrated:
+        from repro.obs.attribution import (aggregate_error, compare,
+                                           render_report)
+        cal, store, tracer = seed_calibration(
+            g, proposals, system=system, iters=args.cal_iters)
+        if cal.is_empty:
+            print(f"calibration: fit is empty after {store.n_samples()} "
+                  "samples — stock ranking stands", file=sys.stderr)
+            sys.exit(1)
+        print(f"\ncalibration: {cal.summary()}")
+        recal = search_plans(
+            g, None, system=system, hbm_bytes=hbm, top_k=args.top_k,
+            include_infeasible=args.all, calibration=cal, **axes)
+        if args.measure:
+            recal = refine(g, recal)
+        print("\ncalibrated ranking (fitted overlay applied):")
+        print(_HEADER)
+        for i, p in enumerate(recal):
+            print(_fmt_row(i, p, g))
+        if tracer is not None:
+            top = next(p for p in proposals
+                       if p.plan is not None
+                       and p.point.schedule != "incremental")
+            rows_stock = compare(top.plan, tracer, system=system)
+            rows_cal = compare(top.plan, tracer, system=system,
+                               calibration=cal)
+            e_s, e_c = aggregate_error(rows_stock), aggregate_error(rows_cal)
+            fmt = lambda e: "-" if e is None else f"{e:.4f}"
+            print(f"\nattribution of the traced {top.spec()} run "
+                  f"(stock model):")
+            print(render_report(rows_stock))
+            print("\nsame trace, calibrated model:")
+            print(render_report(rows_cal))
+            print(f"\naggregate model error: stock={fmt(e_s)} "
+                  f"calibrated={fmt(e_c)}")
+        if args.save_overlay:
+            with open(args.save_overlay, "w") as f:
+                json.dump(cal.to_dict(), f, indent=1)
+                f.write("\n")
+            print(f"# overlay saved: {args.save_overlay}")
+
 
 def run(iters: int = 1, fast: bool = False):
-    """benchmarks/run.py suite: top-5 modeled plans as CSV rows."""
+    """benchmarks/run.py suite: top-5 modeled plans, then the
+    ranking-quality rows the calibration loop is judged by — was the stock
+    top-1 / the calibrated top-1 actually the measured-best plan? Yields
+    one case group per part (per-case t_stage in BENCH_plan_search.json)."""
     if fast:
         g = default_geometry(32, n_proj=64)
         devices = 4
@@ -165,7 +287,39 @@ def run(iters: int = 1, fast: bool = False):
             f"{p.predicted_gups(g):.1f}GUPS "
             + p.spec().replace(",", ";"),
         ))
-    return rows
+    yield rows
+
+    # -- ranking quality: predicted->measured loop on a buildable problem --
+    gl = default_geometry(16, n_proj=8) if fast \
+        else default_geometry(32, n_proj=64)
+    # Same impl admission as auto_plan: the seeded runs only cover the
+    # stock top plans, so an impl with no fitted evidence must not win
+    # the calibrated ranking on its (unfalsified) stock factor.
+    stock = search_plans(gl, None, system=ABCI, top_k=4,
+                         impls=admitted_impls(None))
+    cal, _, _ = seed_calibration(gl, stock, iters=max(3, iters + 2))
+    calibrated = search_plans(gl, None, system=ABCI, top_k=4,
+                              impls=admitted_impls(cal),
+                              calibration=cal) if not cal.is_empty else stock
+    cands = {}
+    for p in stock + calibrated:
+        cands.setdefault(p.spec(), p)
+    meas = {spec: measure_proposal(gl, p, iters=max(2, iters))
+            for spec, p in cands.items()}
+    best = min(meas, key=meas.get)
+    s_spec, c_spec = stock[0].spec(), calibrated[0].spec()
+    rows = [
+        (f"plan_search/ranking/stock_top1", meas[s_spec] * 1e6,
+         f"top1_hit={s_spec == best} spec={s_spec.replace(',', ';')}"),
+        (f"plan_search/ranking/calibrated_top1", meas[c_spec] * 1e6,
+         f"top1_hit={c_spec == best} fitted={not cal.is_empty} "
+         f"speedup_vs_stock={meas[s_spec] / meas[c_spec]:.2f}x "
+         f"spec={c_spec.replace(',', ';')} "
+         f"{'OK' if meas[c_spec] <= meas[s_spec] else 'MISS'}"),
+        (f"plan_search/ranking/measured_best", meas[best] * 1e6,
+         f"n_candidates={len(cands)} spec={best.replace(',', ';')}"),
+    ]
+    yield rows
 
 
 if __name__ == "__main__":

@@ -100,26 +100,51 @@ def main(argv=None) -> None:
             kwargs["plan_spec"] = args.plan
         if name == "serving" and args.policy:
             kwargs["policy"] = args.policy
+        def _delta(before, after):
+            return {
+                k: round(v - before.get(k, 0.0), 6)
+                for k, v in sorted(after.items())
+                if v - before.get(k, 0.0) > 0.0
+            }
+
+        # Iterate the suite LAZILY, snapshotting the tracer around each
+        # yielded item: a suite that yields case groups (lists of rows —
+        # bench_streaming/bench_serving) gets a per-case t_stage delta on
+        # each case's rows instead of the whole run's cumulative totals
+        # repeated on every row. The cumulative stays at suite level (one
+        # trailing ``suite_total`` record).
         before = _stage_snapshot()
+        items = []                       # [(rows_of_item, per_item_delta)]
+        grouped = False                  # suite yielded case groups (lists)
         try:
-            rows = list(fn(**kwargs))
+            it = fn(**kwargs)
+            prev = _stage_snapshot()
+            for item in it:
+                now = _stage_snapshot()
+                if isinstance(item, list):
+                    grouped = True
+                    group = item
+                else:
+                    group = [item]
+                items.append((group, _delta(prev, now)))
+                prev = now
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"{name},nan,FAILED")
             continue
+        rows = [row for g, _ in items for row in g]
         for row, us, derived in rows:
             print(f"{row},{us:.1f},{derived}")
         if args.json:
-            after = _stage_snapshot()
-            t_stage = {
-                k: round(v - before.get(k, 0.0), 6)
-                for k, v in sorted(after.items())
-                if v - before.get(k, 0.0) > 0.0
-            }
-            bench_streaming.write_json(
-                os.path.join(root, f"BENCH_{name}.json"), rows,
-                t_stage=t_stage)
+            t_stage = _delta(before, _stage_snapshot())
+            path = os.path.join(root, f"BENCH_{name}.json")
+            if grouped:
+                row_stages = [d for g, d in items for _ in g]
+                bench_streaming.write_json(path, rows, t_stage=t_stage,
+                                           row_stages=row_stages)
+            else:
+                bench_streaming.write_json(path, rows, t_stage=t_stage)
     if args.trace:
         obs_trace.get_tracer().save(args.trace)
         print(f"# trace: {args.trace} "

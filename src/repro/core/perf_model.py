@@ -57,6 +57,35 @@ class MachineSpec:
             updates["bw_rank_io"] = rank_io
         return dataclasses.replace(self, **updates)
 
+    def with_overlay(self, *, flt_scale: float = 1.0,
+                     allgather_scale: float = 1.0,
+                     reduce_scale: float = 1.0,
+                     read_scale: float = 1.0,
+                     write_scale: float = 1.0) -> "MachineSpec":
+        """This machine re-anchored by measured/predicted TIME scales (the
+        calibration fit's overlay, planner/calibrate.py): a stage that ran
+        `s`x slower than modeled gets its throughput/bandwidth divided by
+        `s`, so the model predicts the measured time going forward. Scales
+        of 1.0 (unfitted constants) leave the stock value untouched."""
+        def div(v: float, s: float) -> float:
+            return v / s if s > 0 else v
+
+        updates = {}
+        if flt_scale != 1.0:
+            updates["th_flt"] = div(self.th_flt, flt_scale)
+        if allgather_scale != 1.0:
+            updates["th_allgather"] = div(self.th_allgather, allgather_scale)
+        if reduce_scale != 1.0:
+            updates["th_reduce"] = div(self.th_reduce, reduce_scale)
+        if read_scale != 1.0:
+            updates["bw_load"] = div(self.bw_load, read_scale)
+        if write_scale != 1.0:
+            updates["bw_store"] = div(self.bw_store, write_scale)
+        if not updates:
+            return self
+        updates["name"] = f"{self.name}+calibrated"
+        return dataclasses.replace(self, **updates)
+
     def agg_read_bw(self, n_readers: int) -> float:
         """Aggregate PFS read bandwidth `n_readers` concurrent ranks see."""
         if self.bw_rank_io is None:

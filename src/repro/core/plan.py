@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Literal, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, Literal, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -838,13 +838,19 @@ class ReconstructionPlan:
 
         Works with the tracer disabled too (stages just run unfenced);
         enable via `obs.enable()` (or a local Tracer via obs.set_tracer)
-        to collect the spans.
+        to collect the spans. With tracing enabled, every run also deposits
+        its per-stage wall times into the calibration store
+        (planner/calibrate.py) — traced runs are what anchors the planner's
+        cost constants to this host.
+
+        schedule="incremental" returns a `TracedIncrementalSession` instead
+        of a callable: the same per-stage decomposition applied to the
+        streaming session's stage()/fold path (its `session.stage`/
+        `session.fold` work split into the ``stage.*`` vocabulary), feeding
+        the same store.
         """
         if self.schedule == "incremental":
-            raise ValueError(
-                "schedule='incremental' is stateful; trace it through the "
-                "IncrementalSession spans (session.stage/fold/finalize) "
-                "instead of build_traced()")
+            return TracedIncrementalSession(self, source=source, sink=sink)
         self.validate()
         g = self.geometry
         mesh = self.mesh
@@ -928,6 +934,7 @@ class ReconstructionPlan:
 
         def reconstruct_traced(projections: Optional[Array] = None) -> Array:
             tracer = get_tracer()
+            seconds: Dict[str, float] = {}
             with tracer.span("engine.traced", **attrs):
                 if projections is None:
                     if source is None:
@@ -936,21 +943,33 @@ class ReconstructionPlan:
                             "pass the projections array")
                     with tracer.span("stage.read") as sp:
                         projections = sp.fence(source.load(mesh))
+                    seconds["stage.read"] = sp.duration_s
                 elif mesh is not None:
                     projections = jax.device_put(projections,
                                                  input_sharding(mesh))
                 with tracer.span("stage.filter") as sp:
                     data, scales = sp.fence(run_filter(projections))
+                seconds["stage.filter"] = sp.duration_s
                 with tracer.span("stage.allgather") as sp:
                     pm_col, q_col, sc_col = sp.fence(
                         run_gather(data, scales))
+                seconds["stage.allgather"] = sp.duration_s
                 with tracer.span("stage.backproject") as sp:
                     parts = sp.fence(bp_fn(pm_col, q_col, sc_col))
+                seconds["stage.backproject"] = sp.duration_s
                 with tracer.span("stage.reduce") as sp:
                     volume = sp.fence(reduce_fn(parts))
+                seconds["stage.reduce"] = sp.duration_s
                 if sink is not None:
-                    with tracer.span("stage.write"):
+                    with tracer.span("stage.write") as sp:
                         sink.write(volume)
+                    seconds["stage.write"] = sp.duration_s
+            if tracer.enabled:
+                # a traced run IS a calibration sample: feed the measured
+                # stage times back into the planner's store. Disabled
+                # tracer: spans are no-ops, there is nothing to record.
+                from repro.planner.calibrate import record_traced_run
+                record_traced_run(self, seconds)
             return volume
 
         return reconstruct_traced
@@ -1113,8 +1132,8 @@ class IncrementalSession:
     # -- the fold (one delta) -----------------------------------------------
 
     def _fold_closures(self, with_volume: bool):
-        """(fold, rank_fold): the per-delta fold shared by the raw-delta
-        update path and the staged fold path.
+        """(fold, rank_fold, accumulate): the per-delta fold shared by the
+        raw-delta update path and the staged fold path.
 
         fold(acc_slab, pm_col, q_col, sc_col)       one rank's slab fold
         rank_fold(acc, carry, pm_col, q_col, sc_col)
@@ -1122,6 +1141,14 @@ class IncrementalSession:
                                                     scatter reduce + carry,
                                                     fused epilogue when
                                                     with_volume
+        accumulate(acc, carry, part)
+            -> (new_acc, new_carry)                 the scatter branch's
+                                                    reduce-into-state given
+                                                    a PRECOMPUTED partial —
+                                                    the seam the traced
+                                                    session cuts at to time
+                                                    back-projection apart
+                                                    from the reduce
         """
         plan, st, g = self.plan, self._stages, self.plan.geometry
         slab_pmats = st.slab_pmats
@@ -1157,6 +1184,24 @@ class IncrementalSession:
                     slab = lax.psum(slab, a)
             return slab * scale
 
+        def accumulate(acc, carry, part):
+            if compensated:
+                # error feedback along the time axis: re-inject the
+                # residual this rank dropped quantizing the PREVIOUS
+                # delta before quantizing this one (cf. the chunked
+                # schedule's per-chunk carry).
+                part = part + carry[0]
+                half = part.astype(jnp.bfloat16)
+                new_carry = (part - half.astype(jnp.float32))[None]
+                red = lax.psum_scatter(
+                    half, data_axis, scatter_dimension=1,
+                    tiled=True).astype(jnp.float32)
+            else:
+                new_carry = carry
+                red = lax.psum_scatter(part, data_axis,
+                                       scatter_dimension=1, tiled=True)
+            return acc + red[None], new_carry
+
         def rank_fold(acc, carry, pm_col, q_col, sc_col):
             if not scatter:
                 new = fold(acc[0], pm_col, q_col, sc_col)[None]
@@ -1164,25 +1209,10 @@ class IncrementalSession:
             else:
                 part = backproject(slab_pmats(pm_col), q_col,
                                    nx_slab, g.n_y, g.n_z, scales=sc_col)
-                if compensated:
-                    # error feedback along the time axis: re-inject the
-                    # residual this rank dropped quantizing the PREVIOUS
-                    # delta before quantizing this one (cf. the chunked
-                    # schedule's per-chunk carry).
-                    part = part + carry[0]
-                    half = part.astype(jnp.bfloat16)
-                    new_carry = (part - half.astype(jnp.float32))[None]
-                    red = lax.psum_scatter(
-                        half, data_axis, scatter_dimension=1,
-                        tiled=True).astype(jnp.float32)
-                else:
-                    new_carry = carry
-                    red = lax.psum_scatter(part, data_axis,
-                                           scatter_dimension=1, tiled=True)
-                new = acc + red[None]
+                new, new_carry = accumulate(acc, carry, part)
             return new, new_carry, fin_slab(new) if with_volume else None
 
-        return fold, rank_fold
+        return fold, rank_fold, accumulate
 
     def _state_specs(self, with_volume: bool):
         """(in-state specs, out_specs, pack) for a shard_mapped fold: the
@@ -1221,7 +1251,7 @@ class IncrementalSession:
         st = self._stages
         gather_batch = st.gather_batch
         scale = st.scale
-        fold, rank_fold = self._fold_closures(with_volume)
+        fold, rank_fold, _ = self._fold_closures(with_volume)
 
         if mesh is None:
             def update_fn(acc, pm_d, raw_d):
@@ -1282,7 +1312,7 @@ class IncrementalSession:
             return fn
         mesh = self.plan.mesh
         scale = self._stages.scale
-        fold, rank_fold = self._fold_closures(with_volume)
+        fold, rank_fold, _ = self._fold_closures(with_volume)
 
         if mesh is None:
             def fold_fn(acc, pm_col, q_col, sc_col):
@@ -1478,6 +1508,232 @@ class IncrementalSession:
             with tracer.span("stage.write"):
                 self._sink.write(volume)
         return volume
+
+
+class TracedIncrementalSession(IncrementalSession):
+    """The streaming session cut at its stage seams — `build_traced` for
+    schedule="incremental".
+
+    Same state machine and exactness contract as `IncrementalSession`, but
+    every `session.stage`/`session.fold` is decomposed into separately
+    dispatched, fenced ``stage.*`` spans (the `STAGE_FIELDS` vocabulary):
+    stage() emits ``stage.filter`` + ``stage.allgather``; a fold emits
+    ``stage.backproject`` and — under the scatter reduces, where each delta
+    psum_scatters its partial — ``stage.reduce`` (the accumulate half of
+    `_fold_closures`, dispatched apart from the back-projection); the
+    finalize epilogue is a ``stage.reduce`` span too (psum's one deferred
+    reduce). Raw deltas are routed through stage() first so the raw-update
+    path decomposes identically.
+
+    Like `build_traced`, this is a MEASUREMENT configuration: the split
+    dispatches trade away the fold fusion the production session buys, and
+    the spans are `timed=True` so stage seconds accumulate even with the
+    tracer disabled. On the first full-coverage volume (finalize, or a
+    fused `update(..., finalize=True)`) the accumulated stage times are
+    deposited into the calibration store (planner/calibrate.py) against
+    the plan's incremental cost point — streaming sessions feed the same
+    predicted->measured loop as the batch engines.
+    """
+
+    def __init__(self, plan: ReconstructionPlan, source=None, sink=None):
+        super().__init__(plan, source=source, sink=sink)
+        self._stage_seconds: Dict[str, float] = {}
+        self._recorded = False
+        self._traced_finalize = None
+
+    def _bump(self, name: str, sp) -> None:
+        self._stage_seconds[name] = (self._stage_seconds.get(name, 0.0)
+                                     + sp.duration_s)
+
+    def stage_seconds(self) -> Dict[str, float]:
+        """Accumulated per-stage wall seconds so far (a copy)."""
+        return dict(self._stage_seconds)
+
+    # -- stage decomposition -------------------------------------------------
+
+    def _get_stage_fn(self, n_d: int) -> Callable:
+        fn = self._stage_fns.get(("traced", n_d))
+        if fn is not None:
+            return fn
+        mesh = self.plan.mesh
+        st = self._stages
+        filter_encode = st.filter_encode
+        gather_cols = st.gather_cols
+        if mesh is None:
+            _filter = jax.jit(filter_encode)
+            _gather = jax.jit(gather_cols)
+
+            def run_filter(raw):
+                return _filter(raw)
+
+            def run_gather(pm_d, data, scales):
+                return _gather(pm_d, data, scales)
+        else:
+            pspec = _proj_spec(mesh)
+            gspec = self._gathered_spec()
+            if self.plan.resolved_precision().codec.has_scales:
+                # plain tuple: shard_map's out_specs prefix does not match
+                # the EncodedStream NamedTuple subtype (same trick as
+                # build_traced's batch decomposition).
+                _filter = jax.jit(shard_map(
+                    lambda raw: tuple(filter_encode(raw)), mesh=mesh,
+                    in_specs=(pspec,), out_specs=(pspec, pspec),
+                    check_vma=False))
+                _gather = jax.jit(shard_map(
+                    gather_cols, mesh=mesh,
+                    in_specs=(pspec, pspec, pspec),
+                    out_specs=(gspec, gspec, gspec), check_vma=False))
+
+                def run_filter(raw):
+                    return _filter(raw)
+
+                def run_gather(pm_d, data, scales):
+                    return _gather(pm_d, data, scales)
+            else:
+                _filter = jax.jit(shard_map(
+                    lambda raw: filter_encode(raw)[0], mesh=mesh,
+                    in_specs=(pspec,), out_specs=pspec, check_vma=False))
+                _gather = jax.jit(shard_map(
+                    lambda pm, d: gather_cols(pm, d, None)[:2],
+                    mesh=mesh, in_specs=(pspec, pspec),
+                    out_specs=(gspec, gspec), check_vma=False))
+
+                def run_filter(raw):
+                    return _filter(raw), None
+
+                def run_gather(pm_d, data, scales):
+                    pm_col, q_col = _gather(pm_d, data)
+                    return pm_col, q_col, None
+
+        def staged_fn(pm_d, raw_d):
+            tracer = get_tracer()
+            with tracer.span("stage.filter", timed=True) as sp:
+                data, scales = sp.fence(run_filter(raw_d))
+            self._bump("stage.filter", sp)
+            with tracer.span("stage.allgather", timed=True) as sp:
+                cols = sp.fence(run_gather(pm_d, data, scales))
+            self._bump("stage.allgather", sp)
+            return cols
+
+        self._stage_fns[("traced", n_d)] = staged_fn
+        return staged_fn
+
+    def _get_fold_fn(self, n_d: int, with_volume: bool = False) -> Callable:
+        key = ("traced", n_d, with_volume)
+        fn = self._fold_fns.get(key)
+        if fn is not None:
+            return fn
+        fin = self._get_finalize_fn() if with_volume else None
+
+        if not self._scatter:
+            # psum: the fold IS the back-projection (accumulation is the
+            # back-projector's own `init=` epilogue — nothing to cut); the
+            # row reduce is deferred to finalize, dispatched via `fin`.
+            inner = IncrementalSession._get_fold_fn(self, n_d,
+                                                    with_volume=False)
+
+            def traced_fold(*args):
+                with get_tracer().span("stage.backproject",
+                                       timed=True) as sp:
+                    new = sp.fence(inner(*args))
+                self._bump("stage.backproject", sp)
+                return (new, fin(new)) if with_volume else new
+        else:
+            # scatter: cut the per-delta fold at the _fold_closures
+            # `accumulate` seam — back-projection partial in one dispatch
+            # (stage.backproject), carry + psum_scatter into the resident
+            # state in another (stage.reduce).
+            mesh = self.plan.mesh
+            st = self._stages
+            g = self.plan.geometry
+            backproject, slab_pmats = st.backproject, st.slab_pmats
+            nx_slab = st.nx_slab
+            _, _, accumulate = self._fold_closures(with_volume=False)
+
+            def bp_rank(pm_col, q_col, sc_col):
+                return backproject(slab_pmats(pm_col), q_col, nx_slab,
+                                   g.n_y, g.n_z, scales=sc_col)[None]
+
+            gspec = self._gathered_spec()
+            part_spec = P(_lead_axes(st.dp), AXIS_MODEL, None, None)
+            bp_fn = jax.jit(shard_map(
+                bp_rank, mesh=mesh, in_specs=(gspec, gspec, gspec),
+                out_specs=part_spec, check_vma=False))
+            state_in, out_specs, pack = self._state_specs(False)
+            if self._compensated:
+                def acc_rank(acc, carry, part):
+                    new, new_carry = accumulate(acc, carry, part[0])
+                    return pack(new, new_carry, None)
+            else:
+                def acc_rank(acc, part):  # carry unused: pass acc
+                    new, _ = accumulate(acc, acc, part[0])
+                    return pack(new, None, None)
+            acc_fn = jax.jit(shard_map(
+                acc_rank, mesh=mesh, in_specs=state_in + (part_spec,),
+                out_specs=out_specs, check_vma=False))
+            n_state = 2 if self._compensated else 1
+
+            def traced_fold(*args):
+                state, cols = args[:n_state], args[n_state:]
+                tracer = get_tracer()
+                with tracer.span("stage.backproject", timed=True) as sp:
+                    part = sp.fence(bp_fn(*cols))
+                self._bump("stage.backproject", sp)
+                with tracer.span("stage.reduce", timed=True) as sp:
+                    new_state = sp.fence(acc_fn(*state, part))
+                self._bump("stage.reduce", sp)
+                if not with_volume:
+                    return new_state
+                if n_state == 2:
+                    new_acc, new_carry = new_state
+                    return new_acc, new_carry, fin(new_acc)
+                return new_state, fin(new_state)
+
+        self._fold_fns[key] = traced_fold
+        return traced_fold
+
+    def _get_finalize_fn(self) -> Callable:
+        if self._traced_finalize is None:
+            inner = super()._get_finalize_fn()
+
+            def fin(acc):
+                with get_tracer().span("stage.reduce", timed=True) as sp:
+                    out = sp.fence(inner(acc))
+                self._bump("stage.reduce", sp)
+                return out
+
+            self._traced_finalize = fin
+        return self._traced_finalize
+
+    # -- calibration feedback ------------------------------------------------
+
+    def update(self, projection_delta, angle_slice=None,
+               finalize: bool = False):
+        if not isinstance(projection_delta, StagedDelta):
+            if angle_slice is None:
+                raise TypeError("angle_slice is required for a raw delta")
+            # route raw deltas through stage() so the raw-update path
+            # decomposes into the same stage.filter/allgather/fold spans.
+            projection_delta = self.stage(projection_delta, angle_slice)
+            angle_slice = None
+        out = super().update(projection_delta, angle_slice,
+                             finalize=finalize)
+        if finalize and self.is_complete:
+            self._record_calibration()
+        return out
+
+    def finalize(self, partial: bool = False) -> Array:
+        volume = super().finalize(partial=partial)
+        if not partial:
+            self._record_calibration()
+        return volume
+
+    def _record_calibration(self) -> None:
+        if self._recorded:
+            return
+        self._recorded = True
+        from repro.planner.calibrate import record_traced_run
+        record_traced_run(self.plan, dict(self._stage_seconds))
 
 
 _SPEC_INT_KEYS = ("n_steps", "y_chunks", "vmem_budget")

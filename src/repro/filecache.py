@@ -22,14 +22,20 @@ class JsonFileCache:
     (observability/tests)."""
 
     def __init__(self, env_var: str, default_filename: str,
-                 version: int = 1):
+                 version: int = 1, path: Optional[str] = None):
         self.env_var = env_var
         self.default_filename = default_filename
         self.version = version
         self.hits = 0
+        # Explicit path wins over env resolution — callers that manage
+        # their own file (tests, the calibration store's save/load CLI)
+        # bypass the env switch entirely.
+        self._path_override = path
 
     def path(self) -> Optional[str]:
         """Resolved cache path, or None when persistence is disabled."""
+        if self._path_override is not None:
+            return self._path_override
         env = os.environ.get(self.env_var)
         if env is not None:
             if env.strip().lower() in ("", "0", "off", "none"):
@@ -60,6 +66,15 @@ class JsonFileCache:
         if path is None:
             return None
         return self._load(path).get(self.key_str(key))
+
+    def entries(self) -> dict:
+        """All stored entries, `{key_str: entry}` — the bulk-read view the
+        calibration store fits from (planner/calibrate.py). Empty dict when
+        persistence is disabled or the file is missing/stale."""
+        path = self.path()
+        if path is None:
+            return {}
+        return self._load(path)
 
     def put(self, key: tuple, entry: Any) -> None:
         path = self.path()

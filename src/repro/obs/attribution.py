@@ -35,8 +35,8 @@ from typing import Dict, Iterable, List, Optional, Union
 
 from .trace import Tracer
 
-__all__ = ["STAGE_FIELDS", "AttributionRow", "compare", "render_report",
-           "stage_totals"]
+__all__ = ["STAGE_FIELDS", "AttributionRow", "aggregate_error", "compare",
+           "render_report", "stage_totals"]
 
 # Engine-stage span name -> PerfBreakdown field. Fixed vocabulary: the
 # traced engine emits exactly these names (core/plan.py build_traced), and
@@ -94,13 +94,17 @@ def stage_totals(trace: Union[Tracer, dict, Iterable[dict]]
     return out
 
 
-def compare(plan, trace, system=None) -> List[AttributionRow]:
+def compare(plan, trace, system=None,
+            calibration=None) -> List[AttributionRow]:
     """Join the plan's modeled `PerfBreakdown` with a measured trace.
 
     plan   : the ReconstructionPlan the traced run executed.
     trace  : Tracer / exported trace dict / event list containing the
              ``stage.*`` spans of a `plan.build_traced()` run.
     system : MachineSpec the prediction is priced on (default ABCI).
+    calibration : optional planner.calibrate.MachineCalibration overlay —
+             the calibrated prediction's attribution (drift checks compare
+             stock rows against calibrated rows of the same trace).
 
     Returns one `AttributionRow` per mapped stage, in pipeline order —
     including rows the model predicts as zero (error None) and rows the
@@ -112,9 +116,9 @@ def compare(plan, trace, system=None) -> List[AttributionRow]:
     """
     from repro.planner.cost import predict_plan
     if system is None:
-        bd = predict_plan(plan)
+        bd = predict_plan(plan, calibration=calibration)
     else:
-        bd = predict_plan(plan, system)
+        bd = predict_plan(plan, system, calibration=calibration)
     measured = stage_totals(trace)
     rows = []
     for stage, field in STAGE_FIELDS.items():
@@ -124,6 +128,27 @@ def compare(plan, trace, system=None) -> List[AttributionRow]:
             predicted_s=float(getattr(bd, field)),
             measured_s=m["seconds"], n_spans=m["n"]))
     return rows
+
+
+def aggregate_error(rows: Iterable[AttributionRow]) -> Optional[float]:
+    """Time-weighted aggregate model error over an attribution report:
+
+        sum(measured * |error|) / sum(measured)
+
+    over the rows that can be attributed (predicted > 0 AND measured, i.e.
+    n_spans > 0) — each stage's relative error weighted by the wall time it
+    actually consumed, so a 50%-off 2 s back-projection dominates a
+    50%-off 1 ms reduce. This is the drift-alarm metric: CI's fast-tier
+    trace step compares it against a committed baseline
+    (benchmarks/export_trace.py --check-drift) and fails on regression.
+    None when no row qualifies (nothing measured, or all-zero model)."""
+    num = den = 0.0
+    for r in rows:
+        if r.error is None or r.n_spans <= 0 or r.measured_s <= 0:
+            continue
+        num += r.measured_s * abs(r.error)
+        den += r.measured_s
+    return None if den <= 0 else num / den
 
 
 def render_report(rows: List[AttributionRow]) -> str:

@@ -15,18 +15,24 @@ or, one string from anywhere the plan API reaches:
     plan = plan_from_spec(geometry, "auto", mesh=mesh)
     plan = plan_from_spec(geometry, "auto,precision=bf16")   # pinned axis
 """
+from .calibrate import CalibrationStore, MachineCalibration, \
+    default_calibration, default_store, record_traced_run, \
+    resolve_calibration, set_default_store
 from .cost import IMPL_GUPS_FACTOR, PlanPoint, point_from_plan, \
     predict_plan, predict_point
 from .feasibility import DEFAULT_HBM_BYTES, MemoryFootprint, \
     check_feasible, plan_footprint
 from .measure import measure_proposal, refine
-from .search import PlanProposal, auto_plan, enumerate_points, \
-    search_grids, search_plans
+from .search import PlanProposal, admitted_impls, auto_plan, \
+    enumerate_points, search_grids, search_plans
 
 __all__ = [
+    "CalibrationStore", "MachineCalibration", "default_calibration",
+    "default_store", "record_traced_run", "resolve_calibration",
+    "set_default_store",
     "IMPL_GUPS_FACTOR", "PlanPoint", "point_from_plan", "predict_plan",
     "predict_point", "DEFAULT_HBM_BYTES", "MemoryFootprint",
     "check_feasible", "plan_footprint", "measure_proposal", "refine",
-    "PlanProposal", "auto_plan", "enumerate_points", "search_grids",
-    "search_plans",
+    "PlanProposal", "admitted_impls", "auto_plan", "enumerate_points",
+    "search_grids", "search_plans",
 ]

@@ -190,8 +190,22 @@ def reduce_wire_bytes(g: CBCTGeometry, point: PlanPoint) -> int:
 
 
 def predict_point(g: CBCTGeometry, point: PlanPoint,
-                  system: MachineSpec = ABCI) -> PerfBreakdown:
-    """Plan-aware Eqs. 8-19: the paper model with the plan's knobs applied."""
+                  system: MachineSpec = ABCI,
+                  calibration=None) -> PerfBreakdown:
+    """Plan-aware Eqs. 8-19: the paper model with the plan's knobs applied.
+
+    `calibration` (a planner.calibrate.MachineCalibration, or None) anchors
+    the constants to this host's measured stage times: the stage-scale
+    overlay re-derives the filter/AllGather/reduce/PFS constants
+    (MachineSpec.with_overlay), the per-impl back-projection scale corrects
+    the analytic IMPL_GUPS_FACTOR ordering with fitted evidence, and the
+    fitted per-step dispatch overhead replaces STEP_OVERHEAD_S. Unfitted
+    constants keep their stock values, so calibration=None reproduces the
+    uncalibrated model bit-for-bit."""
+    step_overhead = STEP_OVERHEAD_S
+    if calibration is not None:
+        system = calibration.apply(system)
+        step_overhead = calibration.step_overhead()
     prec = resolve_precision(point.precision)
     sb = float(prec.storage_bytes)
     grid = point.grid
@@ -208,6 +222,10 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
             f"unknown impl {point.impl!r}; choose from "
             f"{sorted(IMPL_GUPS_FACTOR)}")
     t_update = (base.t_bp - base.t_h2d) / factor
+    if calibration is not None:
+        bp_scale = calibration.bp_scale(point.impl)
+        if bp_scale is not None:
+            t_update *= bp_scale
     t_bp = base.t_h2d + t_update
 
     # chunked: the gathered Q^T batch is re-streamed from HBM once per
@@ -221,7 +239,7 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
 
     # pipelined/chunked: per-micro-batch launch overhead (finite n_steps).
     if point.schedule != "fused":
-        t_bp += point.n_steps * STEP_OVERHEAD_S
+        t_bp += point.n_steps * step_overhead
 
     # reduce-mode-aware volume traffic: ring allreduce (psum) moves
     # 2(C-1)/C x the slab bytes per rank, reduce-scatter (C-1)/C x.
@@ -258,7 +276,8 @@ def predict_point(g: CBCTGeometry, point: PlanPoint,
 
 
 def time_from_last_delta(g: CBCTGeometry, point: PlanPoint,
-                         system: MachineSpec = ABCI) -> float:
+                         system: MachineSpec = ABCI,
+                         calibration=None) -> float:
     """Modeled seconds from the LAST projection landing to the finished
     volume under an incremental plan — the streaming mode's figure of merit
     (benchmarks/bench_streaming.py measures it). The arrival-side stages of
@@ -273,13 +292,15 @@ def time_from_last_delta(g: CBCTGeometry, point: PlanPoint,
         raise ValueError(
             f"time_from_last_delta prices schedule='incremental' points, "
             f"got {point.schedule!r}")
-    bd = predict_point(g, point, system)
+    bd = predict_point(g, point, system, calibration)
+    step_overhead = (STEP_OVERHEAD_S if calibration is None
+                     else calibration.step_overhead())
     n = max(1, point.n_steps)
     # one delta's fold: the per-delta slice of the BP stage (+ the one
     # per-micro-batch overhead predict_point charged n times). The staged
     # arrival work (t_flt, t_allgather, t_h2d) rode along with acquisition.
-    per_delta = ((bd.t_bp - bd.t_h2d - n * STEP_OVERHEAD_S) / n
-                 + STEP_OVERHEAD_S)
+    per_delta = ((bd.t_bp - bd.t_h2d - n * step_overhead) / n
+                 + step_overhead)
     if point.reduce in SCATTER_REDUCES:
         finalize = bd.t_reduce / n          # the last delta's scatter
     else:
@@ -287,6 +308,8 @@ def time_from_last_delta(g: CBCTGeometry, point: PlanPoint,
     return per_delta + finalize + bd.t_d2h + bd.t_store
 
 
-def predict_plan(plan, system: MachineSpec = ABCI) -> PerfBreakdown:
+def predict_plan(plan, system: MachineSpec = ABCI,
+                 calibration=None) -> PerfBreakdown:
     """Plan-aware cost of a concrete ReconstructionPlan."""
-    return predict_point(plan.geometry, point_from_plan(plan), system)
+    return predict_point(plan.geometry, point_from_plan(plan), system,
+                         calibration)

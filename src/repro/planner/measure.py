@@ -97,6 +97,13 @@ def measure_proposal(g: CBCTGeometry, proposal: PlanProposal,
     seconds = sp.duration_s / iters
     _CACHE[key] = seconds
     _FILE_CACHE.put(key, seconds)
+    # One measurement path, two consumers: the same timing that re-ranks
+    # this search also feeds the calibration store (planner/calibrate.py),
+    # so refinement runs accumulate into the fitted overlay instead of
+    # being discarded after ranking. Cached hits above do NOT re-record —
+    # each wall-clock measurement is one sample.
+    from .calibrate import record_engine_measurement
+    record_engine_measurement(g, proposal.point, seconds)
     return seconds
 
 

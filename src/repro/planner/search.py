@@ -20,14 +20,17 @@ The search space is the cross-product the plan layer exposes:
 Candidates that violate the pipeline's divisibility rules are skipped (for
 mesh-backed searches `ReconstructionPlan.validate()` is the authority);
 survivors are priced by the plan-aware cost model (cost.py), pruned by the
-per-device memory model (feasibility.py), and ranked by modeled runtime.
-Ties (the overlap model is a max — plans off the bottleneck cost the same)
+per-device memory model (feasibility.py), and ranked by modeled runtime
+quantized to ~1% buckets (the model's resolution — see
+`_quantized_predicted`). Ties (the overlap model is a max — plans off the
+bottleneck cost the same — and anything within a percent counts as tied)
 break toward accuracy and simplicity: wider storage first, then
 fused < pipelined < chunked, fewer micro-batches, psum before scatter.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterable, Optional, Sequence
 
 from repro.core.distributed import IFDKGrid, SCATTER_REDUCES, grid_candidates
@@ -78,11 +81,29 @@ class PlanProposal:
         return gups_end_to_end(g, self.breakdown)
 
 
+def _quantized_predicted(seconds: float) -> float:
+    """Predicted runtime rounded to ~1% log-buckets for ranking.
+
+    The cost model's resolution is no better than a percent or so — the
+    overlap model is a max over stages, calibration fits carry residuals
+    around 5-10%, and real codec/dispatch overheads are unmodeled.
+    Ranking on raw floats lets sub-noise differences (e.g. a calibrated
+    overlay shaving 0.3% off an fp8 candidate's allgather) outvote the
+    deterministic tie-breaks that prefer wider storage and simpler
+    impls — exactly the candidates whose unmodeled overheads bite.
+    Bucketing the predicted term means "within ~1%" ranks as a tie and
+    falls through to those stable preferences.
+    """
+    if seconds <= 0.0:
+        return float("-inf")
+    return round(math.log(seconds, 1.01))
+
+
 def _rank_key(p: PlanProposal):
     pt = p.point
     return (
         not p.feasible,
-        p.predicted,
+        _quantized_predicted(p.predicted),
         -resolve_precision(pt.precision).storage_bytes,
         _PRECISION_ORDER.index(pt.precision),
         _RANK_SCHEDULE_ORDER.index(pt.schedule),
@@ -131,10 +152,12 @@ def enumerate_points(g: CBCTGeometry, grid: IFDKGrid, *,
 
 def _propose(g: CBCTGeometry, point: PlanPoint,
              system: MachineSpec, hbm_bytes: int,
-             vmem_budget: int | None, plan=None) -> PlanProposal:
+             vmem_budget: int | None, plan=None,
+             calibration=None) -> PlanProposal:
     feasible, reason = check_feasible(g, point, hbm_bytes, vmem_budget)
     return PlanProposal(
-        point=point, breakdown=predict_point(g, point, system),
+        point=point,
+        breakdown=predict_point(g, point, system, calibration),
         footprint=plan_footprint(g, point), feasible=feasible,
         reason=reason, plan=plan)
 
@@ -144,6 +167,7 @@ def search_grids(g: CBCTGeometry, n_devices: int, *,
                  hbm_bytes: int = DEFAULT_HBM_BYTES,
                  vmem_budget: int | None = None,
                  top_k: int | None = 8, include_infeasible: bool = False,
+                 calibration=None,
                  **enumerate_kwargs) -> list[PlanProposal]:
     """Rank the full (grid x plan) space for a hypothetical deployment of
     `n_devices` — no mesh is built, so proposals carry no buildable plan
@@ -158,7 +182,8 @@ def search_grids(g: CBCTGeometry, n_devices: int, *,
     for grid in grids:
         for point in enumerate_points(g, grid, **enumerate_kwargs):
             proposals.append(
-                _propose(g, point, system, hbm_bytes, vmem_budget))
+                _propose(g, point, system, hbm_bytes, vmem_budget,
+                         calibration=calibration))
     proposals.sort(key=_rank_key)
     if not include_infeasible:
         proposals = [p for p in proposals if p.feasible]
@@ -170,7 +195,7 @@ def search_plans(g: CBCTGeometry, mesh=None, *,
                  hbm_bytes: int = DEFAULT_HBM_BYTES,
                  vmem_budget: int | None = None,
                  top_k: int | None = 8, include_infeasible: bool = False,
-                 window: str = "ramlak",
+                 window: str = "ramlak", calibration=None,
                  **enumerate_kwargs) -> list[PlanProposal]:
     """Rank buildable plans on a concrete mesh (or single device).
 
@@ -200,11 +225,36 @@ def search_plans(g: CBCTGeometry, mesh=None, *,
         except ValueError:
             continue
         proposals.append(
-            _propose(g, point, system, hbm_bytes, vmem_budget, plan=plan))
+            _propose(g, point, system, hbm_bytes, vmem_budget, plan=plan,
+                     calibration=calibration))
     proposals.sort(key=_rank_key)
     if not include_infeasible:
         proposals = [p for p in proposals if p.feasible]
     return proposals[:top_k]
+
+
+def admitted_impls(calibration=None) -> tuple[str, ...]:
+    """The impl axis auto selection ranks on THIS backend.
+
+    On TPU both deployment impls compete on their analytic factors. Off
+    TPU, interpret-mode Pallas is not a deployment target, so the
+    analytic kernel factor (tuned for TPU) must not rank it — but
+    measured evidence overrides the prior: once the calibration store
+    has fitted a kernel factor that beats reference's on this host, the
+    kernel competes on its fitted number (pin impl="kernel" to force it
+    regardless). Callers replicating auto_plan's search (e.g.
+    benchmarks/plan_search.py's ranking-quality rows) should use this
+    instead of the raw enumerate default, or an unfitted impl can win a
+    calibrated ranking on pure stock optimism.
+    """
+    import jax
+
+    if jax.default_backend() == "tpu":
+        return ("factorized", "kernel")
+    impls = ["factorized"]
+    if calibration is not None and calibration.admits_impl("kernel"):
+        impls.append("kernel")
+    return tuple(impls)
 
 
 def auto_plan(g: CBCTGeometry, mesh=None, *,
@@ -212,16 +262,26 @@ def auto_plan(g: CBCTGeometry, mesh=None, *,
               hbm_bytes: int = DEFAULT_HBM_BYTES,
               vmem_budget: int | None = None,
               measure: bool = False, top_k: int = 8,
-              window: str = "ramlak", **pins):
+              window: str = "ramlak", calibration="auto", **pins):
     """The `plan_from_spec(g, "auto")` resolver: best feasible plan for
     (geometry, mesh, HBM budget) under the model — optionally refined by
     timing the top-k built engines (planner/measure.py).
+
+    `calibration` anchors the cost constants to this host:
+      "auto" (default)     — the calibration store's fitted overlay when
+                             enough traced samples exist (planner/
+                             calibrate.py), stock constants otherwise;
+      a MachineCalibration — used as given;
+      a MachineSpec        — caller-supplied constants, no overlay;
+      None                 — stock constants, calibration off.
 
     `pins` fix search dimensions the caller chose (e.g. precision="bf16"
     restricts the precision axis; n_steps=4 the micro-batching). Raises
     ValueError when no candidate is both valid and feasible.
     """
-    import jax
+    from .calibrate import resolve_calibration
+
+    cal, system = resolve_calibration(calibration, system)
 
     kw = {}
     schedule = pins.pop("schedule", None)
@@ -232,10 +292,8 @@ def auto_plan(g: CBCTGeometry, mesh=None, *,
         kw["precisions"] = (prec.storage,)
     if "impl" in pins:
         kw["impls"] = (pins.pop("impl"),)
-    elif jax.default_backend() != "tpu":
-        # interpret-mode Pallas is not a deployment target: auto-planning on
-        # CPU/GPU sticks to the XLA paths (pin impl="kernel" to override).
-        kw["impls"] = ("factorized",)
+    else:
+        kw["impls"] = admitted_impls(cal)
     # n_steps/y_chunks pins also constrain the SCHEDULE axis — a schedule
     # that ignores the knob (fused has no micro-batching, only chunked has
     # y-chunks) must not compete and silently win with the pin dropped.
@@ -268,7 +326,7 @@ def auto_plan(g: CBCTGeometry, mesh=None, *,
     candidates = search_plans(
         g, mesh, system=system, hbm_bytes=hbm_bytes,
         vmem_budget=vmem_budget, top_k=None, include_infeasible=True,
-        window=window, **kw)
+        window=window, calibration=cal, **kw)
     if not candidates:
         raise ValueError(
             "auto-plan found no valid candidate for this (geometry, mesh) "

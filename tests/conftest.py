@@ -22,6 +22,12 @@ os.environ.setdefault(
     os.path.join(tempfile.mkdtemp(prefix="repro-plan-"),
                  "plan_measure_cache.json"),
 )
+# The calibration store stays OFF by default in tests: traced runs and
+# measured refinements would otherwise accumulate host-specific timings
+# into ~/.cache and make auto_plan's "auto" calibration nondeterministic
+# across the suite. Tests that want a store install one explicitly
+# (planner.calibrate.set_default_store / CalibrationStore(path=...)).
+os.environ.setdefault("REPRO_CALIB_CACHE", "off")
 
 jax.config.update("jax_enable_x64", False)
 
